@@ -1,0 +1,170 @@
+"""Analytic per-device FLOPs / HBM-byte model for the roofline
+(EXPERIMENTS.md §Roofline methodology).
+
+Why analytic: XLA's compiled cost_analysis counts while-loop bodies ONCE
+(verified by probe — see EXPERIMENTS.md), so scanned-layer programs
+under-report by ~L x. The analytic model uses the 2*MACs convention to stay
+comparable with XLA, counts remat recompute for train, and is validated
+against XLA-counted FLOPs on small UNROLLED configs (tests/test_roofline.py).
+
+All numbers are GLOBAL; divide by n_devices for per-device terms (ideal
+sharding; redundant compute from replicated-weight fallbacks shows up as a
+discrepancy against the dry-run and is discussed in §Perf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.layers import pad_vocab
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link (conservative: 1 link)
+
+
+def _attn_ctx(cfg: ModelConfig, S: int) -> int:
+    return min(S, cfg.sliding_window) if cfg.sliding_window else S
+
+
+def _dense_layer_macs_per_tok(cfg) -> float:
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    attn = cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd \
+        + cfg.n_heads * hd * cfg.d_model
+    if cfg.n_experts:
+        ffn = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts_per_tok * 1.25 \
+            + 3 * cfg.d_model * cfg.shared_d_ff + cfg.d_model * cfg.n_experts
+    else:
+        ffn = 3 * cfg.d_model * cfg.d_ff
+    return attn + ffn
+
+
+def _mamba_layer_macs_per_tok(cfg) -> float:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    proj = D * (2 * d_in + 2 * N + H) + d_in * D
+    conv = 4 * (d_in + 2 * N)
+    Q = cfg.ssm_chunk
+    # SSD per token: cb Q*N, intra Q*d_in, state build/apply ~ 2*N*d_in
+    ssd = Q * N + Q * d_in + 2 * N * d_in
+    return proj + conv + ssd
+
+
+def _score_macs(cfg, S: int, n_heads=None) -> float:
+    """Attention score+pv MACs per sequence (full, mask not exploited —
+    matches the chunked-XLA and flash-without-block-skip lowerings)."""
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    H = n_heads or cfg.n_heads
+    ctx = _attn_ctx(cfg, S)
+    return 2 * S * ctx * H * hd
+
+
+@dataclass
+class CellCost:
+    flops: float          # global, 2*MACs convention, incl. remat
+    hbm_bytes: float      # global
+    model_flops: float    # 6*N_active*D-style "useful" flops
+
+
+def _param_bytes(cfg) -> float:
+    return cfg.param_count() * 2.0  # bf16
+
+
+def cell_cost(cfg: ModelConfig, cell: ShapeCell) -> CellCost:
+    B, S = cell.global_batch, cell.seq_len
+    D = cfg.d_model
+    vpad = pad_vocab(cfg.vocab_size)
+    L = cfg.n_layers
+
+    if cell.kind in ("train", "prefill"):
+        T = B * S
+        if cfg.family in ("ssm",):
+            layer = _mamba_layer_macs_per_tok(cfg) * T * L
+            score = 0.0
+        elif cfg.family == "hybrid":
+            n_sites = len(range(0, L, cfg.attn_every))
+            mam = _mamba_layer_macs_per_tok(cfg) * T * L
+            hd = D // cfg.n_heads
+            attn_tok = 2 * D * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd \
+                + cfg.n_heads * hd * D + 3 * D * cfg.d_ff
+            layer = mam + attn_tok * T * n_sites
+            score = _score_macs(cfg, S) * B * n_sites
+        else:
+            layer = _dense_layer_macs_per_tok(cfg) * T * L
+            score = _score_macs(cfg, S) * B * L
+        # train: logits over all T positions; prefill: last token only
+        head = (T if cell.kind == "train" else B) * D * vpad
+        fwd = layer + score + head
+        if cell.kind == "train":
+            mult = 3.0 + (1.0 if cfg.remat else 0.0)   # fwd + bwd(2x) + remat
+            flops = 2.0 * fwd * mult
+            model = 6.0 * cfg.active_param_count() * T
+        else:
+            flops = 2.0 * fwd
+            model = 2.0 * cfg.active_param_count() * T
+        # HBM: params (x reads), opt state, saved activations, logits
+        pb = _param_bytes(cfg)
+        if cell.kind == "train":
+            hbm = pb * 3                       # fwd read, bwd read, remat read
+            hbm += cfg.param_count() * (8 + 8 + 4 + 4 + 2)  # m,v rw, grad rw, p w
+            hbm += L * T * D * 2 * 2           # saved layer inputs w+r
+            hbm += T * vpad * 4 * 2            # logits + softmax pass
+            hbm += 2 * T * D * 2 * L           # layer io streams
+        else:
+            hbm = pb + 2 * T * D * 2 * L + T * vpad * 4 \
+                + (B * _attn_ctx(cfg, S) * cfg.n_kv_heads *
+                   (cfg.head_dim or D // max(cfg.n_heads, 1)) * 2 * 2 * L
+                   if cfg.n_heads else 0)
+        return CellCost(flops, hbm, model)
+
+    # decode: one step, B tokens
+    ctx = _attn_ctx(cfg, S)
+    hd = (cfg.head_dim or D // cfg.n_heads) if cfg.n_heads else 0
+    if cfg.family == "ssm":
+        per_tok = _mamba_layer_macs_per_tok(cfg)
+        d_in = cfg.ssm_expand * D
+        per_tok += 2 * cfg.ssm_state * d_in    # state update+read dominate
+        macs = per_tok * B * L
+        kv_bytes = L * B * (d_in // cfg.ssm_headdim) * cfg.ssm_state \
+            * cfg.ssm_headdim * 4 * 2
+    elif cfg.family == "hybrid":
+        n_sites = len(range(0, L, cfg.attn_every))
+        macs = _mamba_layer_macs_per_tok(cfg) * B * L
+        attn_tok = 2 * D * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd \
+            + cfg.n_heads * hd * D + 3 * D * cfg.d_ff
+        macs += (attn_tok + 2 * ctx * cfg.n_heads * hd) * B * n_sites
+        d_in = cfg.ssm_expand * D
+        kv_bytes = n_sites * B * ctx * cfg.n_kv_heads * hd * 2 * 2 \
+            + L * B * (d_in // cfg.ssm_headdim) * cfg.ssm_state \
+            * cfg.ssm_headdim * 4 * 2
+    else:
+        macs = _dense_layer_macs_per_tok(cfg) * B * L
+        macs += 2 * ctx * cfg.n_heads * hd * B * L
+        kv_bytes = L * B * ctx * cfg.n_kv_heads * hd * 2 * 2
+    macs += B * D * vpad
+    flops = 2.0 * macs
+    model = 2.0 * cfg.active_param_count() * B
+    hbm = _param_bytes(cfg) + kv_bytes + B * vpad * 4
+    return CellCost(flops, hbm, model)
+
+
+def roofline_terms(cfg: ModelConfig, cell: ShapeCell, n_devices: int,
+                   collective_bytes_per_dev: float) -> dict:
+    c = cell_cost(cfg, cell)
+    t_comp = c.flops / n_devices / PEAK_FLOPS
+    t_mem = c.hbm_bytes / n_devices / HBM_BW
+    t_coll = collective_bytes_per_dev / LINK_BW
+    dom = max((("compute", t_comp), ("memory", t_mem),
+               ("collective", t_coll)), key=lambda kv: kv[1])
+    total = max(t_comp, t_mem, t_coll)
+    return {
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom[0],
+        "model_flops": c.model_flops, "hlo_flops": c.flops,
+        "useful_ratio": c.model_flops / c.flops if c.flops else 0.0,
+        "roofline_fraction": (c.model_flops / n_devices / PEAK_FLOPS) / total
+        if total else 0.0,
+    }

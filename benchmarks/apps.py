@@ -1,0 +1,191 @@
+"""The paper's three evaluation applications (§5.2) as task graphs on the
+I/O-aware runtime, with real task-graph structure and the calibrated
+MareNostrum-4 storage model (DESIGN.md §4).
+
+Workload knobs the paper does not report (compute-task durations) are
+module-level constants; EXPERIMENTS.md reports two HMMER calibrations
+(gain-focused and ordering-focused) and documents the tradeoff.
+"""
+from __future__ import annotations
+
+from repro.core import (Cluster, IORuntime, SimBackend, constraint,
+                        expected_task_time, io, task)
+
+# ---------------------------------------------------------------------------
+# HMMER (homogeneous I/O: one checkpoint class, 290 MB each; paper §5.2.1)
+# ---------------------------------------------------------------------------
+HMMER_TASKS = 2304           # 48 db fragments x 48 seq fragments
+HMMER_CKPT_MB = 290.0
+HMMER_DUR_GAIN = 30.0        # calibration A: reproduces the ~38% static gain
+HMMER_DUR_ORDER = 200.0      # calibration B: reproduces all bar orderings
+
+
+def run_hmmer(mode: str, bw=None, *, n=HMMER_TASKS, dur=HMMER_DUR_ORDER,
+              mb=HMMER_CKPT_MB, io_executors=225, n_workers=12) -> dict:
+    """mode: baseline | io (non-constrained) | constrained (bw=static or
+    'auto'/'auto(min,max,delta)')."""
+    cluster = Cluster.make(n_workers=n_workers, io_executors=io_executors)
+    dev = cluster.workers[0].storage
+
+    @task(returns=1)
+    def hmmpfam(frag):
+        pass
+
+    if mode == "baseline":
+        @task()
+        def checkpointFrag(res, i):
+            pass
+    elif mode == "io":
+        @io
+        @task()
+        def checkpointFrag(res, i):
+            pass
+    else:
+        @constraint(storageBW=bw)
+        @io
+        @task()
+        def checkpointFrag(res, i):
+            pass
+
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        for i in range(n):
+            r = hmmpfam(i, duration=dur)
+            if mode == "baseline":
+                # I/O inside a compute task: 48 concurrent streams per node
+                checkpointFrag(r, i, duration=expected_task_time(dev, 48, mb))
+            else:
+                checkpointFrag(r, i, io_mb=mb)
+        rt.barrier(final=True)
+        return rt.stats()
+
+
+# ---------------------------------------------------------------------------
+# Variants Discovery Pipeline (heterogeneous I/O: 5 checkpoint classes,
+# paper §5.2.2 Table 1)
+# ---------------------------------------------------------------------------
+VARIANTS_PIPELINES = 1728
+VARIANTS_CKPT_MB = {          # Table 1
+    "checkpoint_fastq": 162.0,
+    "checkpoint_mapped": 290.0,   # used twice: bwa_map and sort
+    "checkpoint_merged": 330.0,
+    "checkpoint_marked": 596.0,
+    "checkpoint_grouped": 615.0,
+}
+VARIANTS_DUR_GAIN = 75.0     # calibration A: ~36% static gain (paper: 43%)
+VARIANTS_DUR_ORDER = 300.0   # calibration B: autos beat baseline (real bwa/
+#                              GATK stages run tens of minutes, hiding the
+#                              strict-confinement learning epochs)
+VARIANTS_STAGE_DUR = VARIANTS_DUR_GAIN
+
+
+def run_variants(mode: str, bw=None, *, n=VARIANTS_PIPELINES,
+                 dur=VARIANTS_STAGE_DUR, io_executors=225,
+                 n_workers=12) -> dict:
+    # paper §5.2.2: the NON-constrained run uses 325 I/O executors (pass
+    # io_executors=325 for mode="io"); constrained/auto runs use 225 as in
+    # HMMER (the paper's Fig 22b sweeps the unbounded executor count)
+    cluster = Cluster.make(n_workers=n_workers, io_executors=io_executors)
+    dev = cluster.workers[0].storage
+
+    @task(returns=1)
+    def stage(x):
+        pass
+
+    def make_ckpt(name):
+        if mode == "baseline":
+            @task()
+            def ck(res, i):
+                pass
+        elif mode == "io":
+            @io
+            @task()
+            def ck(res, i):
+                pass
+        else:
+            @constraint(storageBW=bw)
+            @io
+            @task()
+            def ck(res, i):
+                pass
+        ck.defn.name = name           # distinct signature per class ->
+        return ck                     # separate learning phase (paper §4.2.3)
+
+    cks = {name: make_ckpt(name) for name in VARIANTS_CKPT_MB}
+    # pipeline: fastq -> map -> sort -> merge -> mark -> group, checkpoints
+    # hang off each major step; the last two have no compute to hide behind
+    order = ["checkpoint_fastq", "checkpoint_mapped", "checkpoint_mapped",
+             "checkpoint_merged", "checkpoint_marked", "checkpoint_grouped"]
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        for i in range(n):
+            x = i
+            for si, cls in enumerate(order):
+                x = stage(x, duration=dur)
+                mb = VARIANTS_CKPT_MB[cls]
+                if mode == "baseline":
+                    cks[cls](x, i, duration=expected_task_time(dev, 48, mb))
+                else:
+                    cks[cls](x, i, io_mb=mb)
+        rt.barrier(final=True)
+        return rt.stats()
+
+
+# ---------------------------------------------------------------------------
+# Kmeans (iterative; learning-phase amortisation; paper §5.2.3)
+# ---------------------------------------------------------------------------
+KMEANS_FRAGMENTS = 500
+KMEANS_CKPT_MB = 109.0
+KMEANS_PS_DUR = 45.0
+KMEANS_GEN_DUR = 10.0
+KMEANS_RED_DUR = 5.0
+
+
+def run_kmeans(mode: str, bw=None, *, iterations=1, frags=KMEANS_FRAGMENTS,
+               io_executors=225, n_workers=12) -> dict:
+    cluster = Cluster.make(n_workers=n_workers, io_executors=io_executors)
+    dev = cluster.workers[0].storage
+
+    @task(returns=1)
+    def generate_fragment(i):
+        pass
+
+    @task(returns=1)
+    def partial_sum(frag, centers):
+        pass
+
+    @task(returns=1)
+    def reduce_centers(partials):
+        pass
+
+    if mode == "baseline":
+        @task()
+        def checkpointCenters(c, i):
+            pass
+    elif mode == "io":
+        @io
+        @task()
+        def checkpointCenters(c, i):
+            pass
+    else:
+        @constraint(storageBW=bw)
+        @io
+        @task()
+        def checkpointCenters(c, i):
+            pass
+
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        frs = [generate_fragment(i, duration=KMEANS_GEN_DUR)
+               for i in range(frags)]
+        centers = None
+        for it in range(iterations):
+            parts = [partial_sum(f, centers, duration=KMEANS_PS_DUR)
+                     for f in frs]
+            centers = reduce_centers(parts, duration=KMEANS_RED_DUR)
+            for i in range(frags):
+                if mode == "baseline":
+                    checkpointCenters(
+                        centers, i,
+                        duration=expected_task_time(dev, 48, KMEANS_CKPT_MB))
+                else:
+                    checkpointCenters(centers, i, io_mb=KMEANS_CKPT_MB)
+        rt.barrier(final=True)
+        return rt.stats()

@@ -1,0 +1,197 @@
+"""One benchmark per paper figure (deliverable d). Each returns a list of
+CSV rows (name, value, derived-metrics) and asserts the paper's qualitative
+claims where applicable — the claims ARE the reproduction target.
+"""
+from __future__ import annotations
+
+from .apps import (HMMER_DUR_GAIN, HMMER_DUR_ORDER, run_hmmer, run_kmeans,
+                   run_variants)
+
+STATIC_SWEEP = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+# ----------------------------------------------------------- Fig 10 (+11)
+def fig10_hmmer(dur=HMMER_DUR_ORDER, calibration="ordering"):
+    rows = []
+    res = {}
+    res["baseline"] = run_hmmer("baseline", dur=dur)
+    res["non-constrained"] = run_hmmer("io", dur=dur, io_executors=500)
+    for c in STATIC_SWEEP:
+        res[f"static-{c}"] = run_hmmer("constrained", bw=c, dur=dur)
+    res["auto-unbounded"] = run_hmmer("constrained", bw="auto", dur=dur)
+    res["auto(2,256,2)"] = run_hmmer("constrained", bw="auto(2,256,2)", dur=dur)
+    base = res["baseline"]["makespan"]
+    for name, st in res.items():
+        rows.append((f"fig10_hmmer_{calibration}/{name}",
+                     round(st["makespan"], 1),
+                     f"rel={st['makespan'] / base:.3f},"
+                     f"thr={st['io_throughput_mbs']:.0f}MBs,"
+                     f"avg_io_t={st['avg_io_task_time']:.1f}"))
+    # paper claims (Fig 10): non-constrained worse than baseline; U-shaped
+    # static sweep with an interior optimum; static-256 drastically bad
+    statics = {c: res[f"static-{c}"]["makespan"] for c in STATIC_SWEEP}
+    best_c = min(statics, key=statics.get)
+    assert res["non-constrained"]["makespan"] > base, "Fig10: non-constr < baseline?"
+    assert 2 < best_c < 256, "Fig10: optimum not interior"
+    assert statics[256] > statics[best_c] * 3, "Fig10: c=256 not drastic"
+    if calibration == "ordering":
+        assert res["auto-unbounded"]["makespan"] < base, "Fig10: auto !< baseline"
+        assert res["auto(2,256,2)"]["makespan"] < base
+        assert res["auto-unbounded"]["makespan"] <= res["auto(2,256,2)"]["makespan"]
+    gain = 1 - statics[best_c] / base
+    rows.append((f"fig10_hmmer_{calibration}/best_static_gain",
+                 round(gain, 4), f"best_c={best_c}"))
+    return rows, res
+
+
+# ----------------------------------------------------------- Fig 11
+def fig11_throughput(res=None):
+    if res is None:
+        _, res = fig10_hmmer(dur=HMMER_DUR_ORDER)
+    rows = [(f"fig11_hmmer_throughput/{n}",
+             round(st["io_throughput_mbs"], 1),
+             f"peak={st.get('peak_io_mbs', 0):.0f}MBs")
+            for n, st in res.items() if "baseline" not in n]
+    thr = {n: st["io_throughput_mbs"] for n, st in res.items()}
+    statics = {c: thr[f"static-{c}"] for c in STATIC_SWEEP}
+    peak_c = max(statics, key=statics.get)
+    # paper: throughput peaks at the optimal constraint (8) and declines on
+    # both sides; the non-constrained run (all I/O piling onto the first
+    # candidate node, §5.2.2) is worse than every constraint that preserves
+    # parallelism (2..64; at 128/256 parallelism is 3/1 tasks per node and
+    # raw throughput legitimately drops below even the congested run)
+    assert peak_c == 8, f"Fig11: peak at {peak_c} != 8"
+    assert thr["non-constrained"] < min(statics[c] for c in [2, 4, 8, 16, 32, 64])
+    assert all(statics[c] <= statics[8] for c in STATIC_SWEEP)
+    # "auto constraints achieve peak I/O throughput similar to the optimal
+    # constraint" — peak sustained rate, post-learning (blended average
+    # includes the deliberately-congested early epochs)
+    assert res["auto-unbounded"]["peak_io_mbs"] > 0.8 * statics[peak_c]
+    return rows
+
+
+# ----------------------------------------------------------- Fig 12
+def fig12_learning_phase():
+    rows = []
+    st_u = run_hmmer("constrained", bw="auto", dur=HMMER_DUR_ORDER)
+    st_b = run_hmmer("constrained", bw="auto(2,256,2)", dur=HMMER_DUR_ORDER)
+    tu = st_u["tuners"]["checkpointFrag"]
+    tb = st_b["tuners"]["checkpointFrag"]
+    for i, (c, t) in enumerate(tu["history"]):
+        rows.append((f"fig12a_unbounded/epoch{i + 1}", c, f"avg_io_t={t:.2f}s"))
+    for i, (c, t) in enumerate(tb["history"]):
+        rows.append((f"fig12b_bounded/epoch{i + 1}", c, f"avg_io_t={t:.2f}s"))
+    # paper Fig 12a: epochs 2,4,8,16; stop after the 4th (violation, not
+    # registered); final choice 8. Fig 12b: 8 epochs (2..256); choice 8.
+    assert [c for c, _ in tu["history"]] == [2.0, 4.0, 8.0, 16.0]
+    assert sorted(tu["registry"]) == [2.0, 4.0, 8.0]
+    assert tu["modal_choice"] == 8.0
+    assert [c for c, _ in tb["history"]] == [2.0, 4.0, 8.0, 16.0, 32.0,
+                                             64.0, 128.0, 256.0]
+    # "during most of the execution time the final constraint value of the
+    # bounded and the unbounded auto constraint is the same (8)" §5.2.1 —
+    # the bounded registry's ties for tiny final backlogs resolve to the
+    # highest constraint, exactly the paper's re-adjustment caveat
+    assert tb["modal_choice"] == 8.0
+    rows.append(("fig12/unbounded_choice", tu["modal_choice"],
+                 f"last={tu['last_choice']}"))
+    rows.append(("fig12/bounded_choice", tb["modal_choice"],
+                 f"last={tb['last_choice']}"))
+    return rows
+
+
+# ----------------------------------------------------------- Fig 14 (+T2)
+def fig14_variants(dur=None, calibration="gain"):
+    from .apps import VARIANTS_DUR_GAIN, VARIANTS_DUR_ORDER
+    dur = dur or (VARIANTS_DUR_GAIN if calibration == "gain"
+                  else VARIANTS_DUR_ORDER)
+    rows = []
+    res = {}
+    res["baseline"] = run_variants("baseline", dur=dur)
+    res["non-constrained"] = run_variants("io", io_executors=325, dur=dur)
+    for c in [2, 4, 8, 16, 32, 64]:
+        res[f"static-{c}"] = run_variants("constrained", bw=c, dur=dur)
+    res["auto-unbounded"] = run_variants("constrained", bw="auto", dur=dur)
+    res["auto(2,256,2)"] = run_variants("constrained", bw="auto(2,256,2)",
+                                        dur=dur)
+    base = res["baseline"]["makespan"]
+    for name, st in res.items():
+        rows.append((f"fig14_variants_{calibration}/{name}",
+                     round(st["makespan"], 1),
+                     f"rel={st['makespan'] / base:.3f}"))
+    statics = {c: res[f"static-{c}"]["makespan"] for c in [2, 4, 8, 16, 32, 64]}
+    best_c = min(statics, key=statics.get)
+    gain = 1 - statics[best_c] / base
+    rows.append((f"fig14_variants_{calibration}/best_static_gain",
+                 round(gain, 4), f"best_c={best_c}"))
+    # per-class constraints (paper Table 2: each class has its own phase)
+    tuners = res["auto-unbounded"]["tuners"]
+    for cls, summ in sorted(tuners.items()):
+        rows.append((f"table2_constraints_{calibration}/{cls}",
+                     summ["modal_choice"], f"epochs={len(summ['history'])}"))
+    assert res["non-constrained"]["makespan"] > base
+    assert len(tuners) == 5, "five separate learning phases expected"
+    if calibration == "ordering":
+        assert res["auto-unbounded"]["makespan"] < base
+        assert res["auto(2,256,2)"]["makespan"] < base
+    return rows
+
+
+# ----------------------------------------------------------- Fig 21
+def fig21_kmeans():
+    rows = []
+    rel = {}
+    for iters in (1, 3, 6):
+        base = run_kmeans("baseline", iterations=iters)["makespan"]
+        auto_u = run_kmeans("constrained", bw="auto", iterations=iters)
+        auto_b = run_kmeans("constrained", bw="auto(2,256,2)",
+                            iterations=iters)
+        for name, st in (("auto-unbounded", auto_u), ("auto(2,256,2)", auto_b)):
+            r = st["makespan"] / base
+            rel[(iters, name)] = r
+            rows.append((f"fig21_kmeans/iters{iters}/{name}",
+                         round(st["makespan"], 1), f"rel={r:.3f}"))
+        rows.append((f"fig21_kmeans/iters{iters}/baseline", round(base, 1),
+                     "rel=1.0"))
+        if iters == 1:
+            tu = auto_u["tuners"]["checkpointCenters"]
+            learned = sum(min(int(450 // c), 225) for c, _ in tu["history"])
+            rows.append(("fig21_kmeans/unbounded_learning_tasks", learned,
+                         "paper: 435 (we stop one epoch earlier: 421)"))
+            tb = auto_b["tuners"]["checkpointCenters"]
+            learned_b = sum(min(int(450 // c), 225) for c, _ in tb["history"])
+            rows.append(("fig21_kmeans/bounded_learning_tasks", learned_b,
+                         "paper: 446"))
+    # paper: 1 iteration -> no auto benefit; gains appear with more
+    # iterations and grow
+    assert rel[(1, "auto-unbounded")] >= 0.98
+    assert rel[(3, "auto-unbounded")] < rel[(1, "auto-unbounded")]
+    assert rel[(6, "auto-unbounded")] <= rel[(3, "auto-unbounded")]
+    return rows
+
+
+# ----------------------------------------------------------- Fig 22
+def fig22_hyperparameters():
+    rows = []
+    runs = {
+        "auto(2,256,2)": ("constrained", "auto(2,256,2)", 225),
+        "auto(4,16,2)": ("constrained", "auto(4,16,2)", 225),
+        "auto(4,256,4)": ("constrained", "auto(4,256,4)", 225),
+        "unbounded-225exec": ("constrained", "auto", 225),
+        "unbounded-112exec": ("constrained", "auto", 112),
+        "unbounded-56exec": ("constrained", "auto", 56),
+    }
+    out = {}
+    for name, (mode, bw, execs) in runs.items():
+        st = run_hmmer(mode, bw=bw, dur=HMMER_DUR_ORDER, io_executors=execs)
+        out[name] = st["makespan"]
+        rows.append((f"fig22a_hmmer/{name}", round(st["makespan"], 1),
+                     f"choice={st['tuners']['checkpointFrag']['last_choice']}"))
+    # paper: tighter bounds auto(4,16,2) beat auto(2,256,2); fewer I/O
+    # executors start the unbounded phase nearer the optimum and win
+    assert out["auto(4,16,2)"] <= out["auto(2,256,2)"]
+    assert out["unbounded-56exec"] <= out["unbounded-225exec"]
+    for name, (mode, bw, execs) in runs.items():
+        st = run_variants(mode, bw=bw, io_executors=execs)
+        rows.append((f"fig22b_variants/{name}", round(st["makespan"], 1), ""))
+    return rows

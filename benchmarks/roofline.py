@@ -1,0 +1,80 @@
+"""Roofline table (deliverable g): single-pod terms for every runnable
+(arch x shape) cell. Collective bytes come from the dry-run artifacts
+(trip-count-aware HLO parse, per-device); FLOPs/HBM from the analytic model
+(benchmarks/analytic.py — XLA cost_analysis counts loop bodies once, see
+EXPERIMENTS.md §Roofline methodology).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, SHAPES, cell_supported, get_config
+
+from .analytic import cell_cost, roofline_terms
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single", tag: str = ""):
+    p = ARTIFACTS / f"{arch}__{shape}__{mesh}{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "single", tag: str = ""):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skip", "why": why}
+    rec = load_cell(arch, shape, mesh, tag)
+    if rec is None or rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "status": "missing"}
+    n_dev = rec["n_devices"]
+    coll = rec["collectives"]["total_bytes"]
+    terms = roofline_terms(cfg, cell, n_dev, coll)
+    return {"arch": arch, "shape": shape, "status": "ok", "n_dev": n_dev,
+            "hlo_flops_reported_per_dev": rec["flops"],
+            "compile_s": rec.get("compile_s"), **terms}
+
+
+def full_table(mesh: str = "single"):
+    rows = []
+    for a in ARCHS:
+        for s in SHAPES:
+            rows.append(roofline_row(a, s, mesh))
+    return rows
+
+
+def emit_rows():
+    out = []
+    for r in full_table():
+        key = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] != "ok":
+            out.append((key, r["status"], r.get("why", "")))
+            continue
+        out.append((
+            key,
+            round(r["roofline_fraction"], 4),
+            (f"dom={r['dominant']},comp={r['compute_s']:.4f}s,"
+             f"mem={r['memory_s']:.4f}s,coll={r['collective_s']:.4f}s,"
+             f"useful={r['useful_ratio']:.3f}")))
+    # optimized-strategy records where present (EXPERIMENTS.md §Perf)
+    for a in ARCHS:
+        for s, tag, label in [("train_4k", "__it4", "dp_fsdp"),
+                              ("decode_32k", "__it5", "tp_serve"),
+                              ("train_4k", "__it6", "moe_psum_reorder")]:
+            r = roofline_row(a, s, "single", tag)
+            if r["status"] != "ok":
+                continue
+            out.append((f"roofline_opt/{a}/{s}",
+                        round(r["roofline_fraction"], 4),
+                        f"strategy={label},dom={r['dominant']}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in emit_rows():
+        print(f"{name},{val},{extra}")

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: one function per paper table/figure plus
+the roofline table. Prints ``name,value,derived`` CSV (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig10,fig11,fig12,fig14,"
+                         "fig21,fig22,roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slowest sweeps (fig22 variants half)")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import figures
+    from .apps import HMMER_DUR_GAIN
+    from .roofline import emit_rows
+
+    rows = []
+    t0 = time.time()
+
+    def want(name):
+        return only is None or name in only
+
+    if want("fig10"):
+        r, res = figures.fig10_hmmer()
+        rows += r
+        if want("fig11"):
+            rows += figures.fig11_throughput(res)
+        # calibration A: reproduces the paper's headline static gain
+        r2, _ = figures.fig10_hmmer(dur=HMMER_DUR_GAIN, calibration="gain")
+        rows += r2
+    elif want("fig11"):
+        rows += figures.fig11_throughput()
+    if want("fig12"):
+        rows += figures.fig12_learning_phase()
+    if want("fig14"):
+        rows += figures.fig14_variants(calibration="gain")
+        rows += figures.fig14_variants(calibration="ordering")
+    if want("fig21"):
+        rows += figures.fig21_kmeans()
+    if want("fig22") and not args.quick:
+        rows += figures.fig22_hyperparameters()
+    if want("roofline"):
+        rows += emit_rows()
+
+    print("name,value,derived")
+    for name, val, extra in rows:
+        print(f"{name},{val},{extra}")
+    print(f"# {len(rows)} rows in {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Example: lower+compile one (arch x shape x mesh) cell and print its
+roofline terms — the workflow behind EXPERIMENTS.md §Roofline.
+
+  PYTHONPATH=src python examples/dryrun_one_cell.py [arch] [shape]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, "single")
+    print({k: rec[k] for k in ("arch", "shape", "status") if k in rec})
+    if rec["status"] == "ok":
+        from benchmarks.roofline import roofline_row
+        row = roofline_row(arch, shape)
+        print({k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in row.items()})

@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: an I/O-aware task runtime.
+
+Public API (PyCOMPSs-flavoured, paper §4):
+    @task(returns=..., param=INOUT)   declare a task
+    @io                                mark it an I/O task (overlaps compute)
+    @constraint(storageBW=...)         static / "auto" / "auto(min,max,delta)"
+    IORuntime(cluster, backend)        master runtime (sim or real backend)
+    wait_on(fut)                       compss_wait_on
+"""
+from .backends import RealBackend, SimBackend
+from .constraints import AutoSpec, StaticSpec, parse_storage_bw
+from .resources import Cluster, StorageDevice, WorkerNode
+from .runtime import IORuntime, constraint, current_runtime, io, task, wait_on
+from .scheduler import SchedulerError
+from .storage_model import (aggregate_throughput, expected_task_time,
+                            max_concurrent_tasks, per_task_rate)
+from .task import IN, INOUT, OUT, DataHandle, Direction, Future, TaskState
+
+__all__ = [
+    "task", "io", "constraint", "wait_on", "IORuntime", "current_runtime",
+    "SimBackend", "RealBackend", "Cluster", "WorkerNode", "StorageDevice",
+    "AutoSpec", "StaticSpec", "parse_storage_bw", "SchedulerError",
+    "IN", "INOUT", "OUT", "Direction", "DataHandle", "Future", "TaskState",
+    "aggregate_throughput", "per_task_rate", "expected_task_time",
+    "max_concurrent_tasks",
+]

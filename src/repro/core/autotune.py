@@ -1,0 +1,209 @@
+"""Automatic inference of storage-bandwidth constraints (paper §3.3, §4.2.3).
+
+One :class:`AutoTuner` exists per auto-constrained task *signature* (the
+paper assumes an I/O task produces the same workload for the whole run and
+runs a separate learning phase per task). The tuner walks *learning epochs*:
+
+* an epoch uses one constraint value ``c`` and admits up to
+  ``k = min(floor(B / c), io_executors)`` concurrent tasks on the dedicated
+  *active-learning node*;
+* the epoch ends when every admitted task has completed; its average task
+  time is recorded;
+* **bounded** ``auto(min,max,delta)``: c walks min -> max multiplying by
+  delta, every epoch is registered;
+* **unbounded** ``auto``: c starts at ``max(1, floor(B / io_executors))`` and
+  doubles; the phase continues only while ``t_i <= t_{i-1} / 2`` — the
+  violating epoch is *not* registered.
+
+After the phase, :meth:`choose` applies the objective function
+``T(n, c) = ceil(n / k_c) * t_c`` (remainder counts as one extra execution
+group, per paper §4.2.3C) and returns the registered constraint minimising
+it; ties go to the highest constraint (least congestion). ``choose`` is
+re-evaluated every time new requests arrive, so the constraint tracks the
+pending-task count.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .constraints import AutoSpec
+from .storage_model import max_concurrent_tasks
+
+
+class Phase(enum.Enum):
+    LEARNING = "learning"
+    DONE = "done"
+
+
+@dataclass
+class Epoch:
+    constraint: float
+    target_k: int
+    admitted: int = 0
+    completed: int = 0
+    total_time: float = 0.0
+    closed_admission: bool = False
+
+    @property
+    def avg_time(self) -> float:
+        return self.total_time / self.completed if self.completed else float("inf")
+
+    def full(self) -> bool:
+        return self.closed_admission or self.admitted >= self.target_k
+
+    def done(self) -> bool:
+        return (self.closed_admission or self.admitted >= self.target_k) \
+            and self.completed >= self.admitted and self.admitted > 0
+
+
+class AutoTuner:
+    """Learning-phase driver + objective function for one task signature."""
+
+    def __init__(self, signature: str, spec: AutoSpec, device_bw: float,
+                 io_executors: int):
+        self.signature = signature
+        self.spec = spec
+        self.device_bw = float(device_bw)
+        self.io_executors = int(io_executors)
+        self.registry: dict[float, float] = {}   # constraint -> avg task time
+        self.phase = Phase.LEARNING
+        self.history: list[tuple[float, float]] = []  # (constraint, avg) per epoch
+        if spec.bounded:
+            start = float(spec.min)
+        else:
+            start = float(max(1, int(self.device_bw // max(1, self.io_executors))))
+        self.epoch = self._new_epoch(start)
+        self._last_choice: Optional[float] = None
+        self._choice_counts: dict[float, int] = {}
+        self._draining = False
+
+    # -- epoch machinery ------------------------------------------------------
+    def _k_for(self, c: float) -> int:
+        return min(max_concurrent_tasks(self.device_bw, c), self.io_executors)
+
+    def _new_epoch(self, c: float) -> Epoch:
+        return Epoch(constraint=c, target_k=self._k_for(c))
+
+    def learning(self) -> bool:
+        return self.phase == Phase.LEARNING
+
+    def current_constraint(self) -> float:
+        return self.epoch.constraint
+
+    def admit(self) -> bool:
+        """Try to admit one task into the current epoch. Returns False when
+        the epoch is full (the task must wait for the next epoch)."""
+        if not self.learning() or self.epoch.full():
+            return False
+        self.epoch.admitted += 1
+        return True
+
+    def on_task_complete(self, duration: float) -> None:
+        """Called by the scheduler when an epoch-member task finishes."""
+        e = self.epoch
+        e.completed += 1
+        e.total_time += duration
+        if e.done():
+            self._advance()
+
+    def end_of_stream(self) -> None:
+        """No more tasks of this signature will arrive (barrier/shutdown):
+        close admission so a partially-filled epoch can still conclude."""
+        if not self.learning():
+            return
+        self._draining = True
+        e = self.epoch
+        e.closed_admission = True
+        if e.admitted == 0:
+            # nothing ran in this epoch; finish with whatever is registered
+            self._finish()
+        elif e.done():
+            self._advance()
+
+    def _advance(self) -> None:
+        e = self.epoch
+        self.history.append((e.constraint, e.avg_time))
+        if self._draining:
+            # no more arrivals: register what we measured and conclude
+            self.registry[e.constraint] = e.avg_time
+            self._finish()
+            return
+        if self.spec.bounded:
+            self.registry[e.constraint] = e.avg_time
+            nxt = e.constraint * self.spec.delta
+            if nxt > self.spec.max + 1e-9:
+                self._finish()
+            else:
+                self.epoch = self._new_epoch(nxt)
+        else:
+            prev = self._prev_registered_time()
+            if prev is None:
+                self.registry[e.constraint] = e.avg_time
+                self.epoch = self._new_epoch(e.constraint * 2.0)
+            elif e.avg_time <= prev / 2.0 + 1e-12:
+                self.registry[e.constraint] = e.avg_time
+                self.epoch = self._new_epoch(e.constraint * 2.0)
+            else:
+                # continuation condition violated: epoch NOT registered
+                self._finish()
+        # a new epoch whose k tasks can never run (k==0 impossible; k>=1) is fine
+
+    def _prev_registered_time(self) -> Optional[float]:
+        if not self.registry:
+            return None
+        # last registered epoch time
+        last_c = max(self.registry)  # constraints strictly increase over epochs
+        return self.registry[last_c]
+
+    def _finish(self) -> None:
+        self.phase = Phase.DONE
+        if not self.registry:
+            # degenerate: nothing learned; fall back to the starting constraint
+            self.registry[self.epoch.constraint] = self.epoch.avg_time \
+                if self.epoch.completed else 1.0
+
+    # -- objective function (paper §3.3.2) ------------------------------------
+    def objective_time(self, num_tasks: int, c: float) -> float:
+        k = self._k_for(c)
+        t = self.registry[c]
+        if num_tasks <= 0:
+            return 0.0
+        groups = num_tasks // k
+        rem = num_tasks % k
+        total = groups * t
+        if rem:
+            total += t  # remainder estimated as one extra execution group
+        return total
+
+    def choose(self, num_tasks: int) -> float:
+        """Constraint minimising T(num_tasks, c); ties -> highest c."""
+        if not self.registry:
+            return self.epoch.constraint
+        best_c, best_t = None, None
+        for c in sorted(self.registry):
+            t = self.objective_time(num_tasks, c)
+            if best_t is None or t < best_t - 1e-12 or \
+                    (abs(t - best_t) <= 1e-12 and c > best_c):
+                best_c, best_t = c, t
+        self._last_choice = best_c
+        self._choice_counts[best_c] = self._choice_counts.get(best_c, 0) + 1
+        return best_c
+
+    def summary(self) -> dict:
+        return {
+            "signature": self.signature,
+            "phase": self.phase.value,
+            "registry": dict(self.registry),
+            "history": list(self.history),
+            "last_choice": self._last_choice,
+            # the constraint used for the bulk of the run (the last choice can
+            # differ for a small final backlog — ties go to the highest
+            # constraint, paper §4.2.3C / §5.2.1)
+            "modal_choice": max(self._choice_counts,
+                                key=self._choice_counts.get)
+            if self._choice_counts else None,
+            "choice_counts": dict(self._choice_counts),
+        }

@@ -1,0 +1,258 @@
+"""Execution backends.
+
+:class:`SimBackend` — deterministic discrete-event simulator with a virtual
+clock. Compute tasks take their declared ``sim.duration``; I/O tasks move
+``sim.io_bytes`` MB through the congestion model of their device
+(storage_model.py), with per-task rates recomputed at every arrival/departure
+(piecewise-linear integration). Used by the paper-figure benchmarks and the
+property tests — bit-for-bit reproducible.
+
+:class:`RealBackend` — thread pools per worker (a compute platform sized to
+``cpus`` and an I/O platform sized to ``io_executors``, paper Fig. 7), wall
+clock, real user functions (real ``write``+``fsync`` for I/O tasks). Used by
+the end-to-end training driver for async checkpointing.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
+
+from .scheduler import Scheduler, SchedulerError
+from .storage_model import per_task_rate
+from .task import DataHandle, Future, TaskInstance, TaskState, TaskType
+
+_EPS = 1e-9
+
+
+class Backend:
+    """Interface the runtime drives."""
+
+    def bind(self, runtime) -> None:
+        self.runtime = runtime
+
+    def launch(self, task: TaskInstance, worker) -> None:
+        raise NotImplementedError
+
+    def drain(self, predicate: Callable[[], bool]) -> None:
+        raise NotImplementedError
+
+    def on_submitted(self) -> None:
+        pass
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        pass
+
+
+# --------------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------------
+class SimBackend(Backend):
+    def __init__(self):
+        self.clock = 0.0
+        self._compute: dict[int, tuple[TaskInstance, float]] = {}  # tid -> (task, end)
+        self._io: dict[int, list] = {}  # tid -> [task, remaining_mb, min_end]
+        self.io_busy_time = 0.0         # union over devices of I/O activity
+        self.compute_busy_time = 0.0
+        self.overlap_time = 0.0         # time with BOTH compute and I/O active
+        self.total_io_mb = 0.0
+        self.peak_io_mbs = 0.0          # max sustained aggregate I/O rate
+
+    def now(self) -> float:
+        return self.clock
+
+    def launch(self, task: TaskInstance, worker) -> None:
+        task.start_time = self.clock
+        if task.defn.task_type == TaskType.COMPUTE:
+            self._compute[task.tid] = (task, self.clock + max(task.sim.duration, _EPS))
+        else:
+            rem = max(task.sim.io_bytes, 0.0)
+            min_end = self.clock + max(task.sim.duration, _EPS)
+            self._io[task.tid] = [task, rem, min_end]
+
+    def _next_event_time(self) -> float:
+        t = float("inf")
+        for _, end in self._compute.values():
+            t = min(t, end)
+        # group io tasks per device for rate computation
+        for task, rem, min_end in self._io.values():
+            dev = task.worker.storage
+            rate = per_task_rate(dev, dev.active_io)
+            eta = self.clock + rem / rate if rate > 0 else float("inf")
+            t = min(t, max(eta, min_end))
+        return t
+
+    def _advance_to(self, t: float) -> None:
+        dt = t - self.clock
+        if dt <= 0:
+            self.clock = t
+            return
+        io_active = bool(self._io)
+        comp_active = bool(self._compute)
+        if io_active:
+            self.io_busy_time += dt
+        if comp_active:
+            self.compute_busy_time += dt
+        if io_active and comp_active:
+            self.overlap_time += dt
+        interval_mb = 0.0
+        for rec in self._io.values():
+            task, rem, _ = rec
+            dev = task.worker.storage
+            rate = per_task_rate(dev, dev.active_io)
+            moved = min(rem, rate * dt)
+            rec[1] = rem - moved
+            dev.bytes_written += moved
+            self.total_io_mb += moved
+            interval_mb += moved
+        if dt > 1e-6 and interval_mb > 0:
+            self.peak_io_mbs = max(self.peak_io_mbs, interval_mb / dt)
+        self.clock = t
+
+    def _pop_due(self) -> list[TaskInstance]:
+        due = []
+        for tid in list(self._compute):
+            task, end = self._compute[tid]
+            if end <= self.clock + _EPS:
+                del self._compute[tid]
+                due.append(task)
+        for tid in list(self._io):
+            task, rem, min_end = self._io[tid]
+            if rem <= 1e-6 and min_end <= self.clock + _EPS:
+                del self._io[tid]
+                due.append(task)
+        return due
+
+    def drain(self, predicate: Callable[[], bool]) -> None:
+        rt = self.runtime
+        while True:
+            rt.scheduler.schedule_pass()
+            if predicate():
+                return
+            if not self._compute and not self._io:
+                # nothing running: either stalled learning epochs or done
+                if rt.scheduler.ready:
+                    rt.scheduler.assert_not_stuck()
+                    continue
+                if predicate():
+                    return
+                raise SchedulerError(
+                    f"simulation drained but predicate unmet "
+                    f"(unfinished={rt.graph.unfinished})")
+            t = self._next_event_time()
+            if t == float("inf"):
+                raise SchedulerError("no next event with tasks running")
+            self._advance_to(t)
+            for task in self._pop_due():
+                task.end_time = self.clock
+                for f in task.futures:
+                    f.set_value(None)
+                rt._handle_completion(task)
+
+
+# --------------------------------------------------------------------------
+# Real (threaded) backend
+# --------------------------------------------------------------------------
+class RealBackend(Backend):
+    def __init__(self, poll_interval: float = 0.02):
+        self._t0 = time.monotonic()
+        self._pools: dict[tuple[str, str], ThreadPoolExecutor] = {}
+        self._cv = threading.Condition()  # rebound to runtime.lock in bind()
+        self._poll = poll_interval
+        self._failed: list[TaskInstance] = []
+
+    def bind(self, runtime) -> None:
+        super().bind(runtime)
+        self._cv = threading.Condition(runtime.lock)
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _pool(self, worker, platform: str) -> ThreadPoolExecutor:
+        key = (worker.name, platform)
+        if key not in self._pools:
+            size = worker.cpus if platform == "compute" else worker.io_executors
+            self._pools[key] = ThreadPoolExecutor(
+                max_workers=max(1, size),
+                thread_name_prefix=f"{worker.name}-{platform}")
+        return self._pools[key]
+
+    @staticmethod
+    def _resolve(arg, _depth=0):
+        if isinstance(arg, Future):
+            return arg.value()
+        if _depth < 4:
+            if isinstance(arg, list):
+                return [RealBackend._resolve(v, _depth + 1) for v in arg]
+            if isinstance(arg, tuple):
+                return tuple(RealBackend._resolve(v, _depth + 1) for v in arg)
+            if isinstance(arg, dict):
+                return {k: RealBackend._resolve(v, _depth + 1)
+                        for k, v in arg.items()}
+        return arg
+
+    def launch(self, task: TaskInstance, worker) -> None:
+        platform = "compute" if task.defn.task_type == TaskType.COMPUTE else "io"
+        task.start_time = self.now()
+        self._pool(worker, platform).submit(self._run, task)
+
+    def _run(self, task: TaskInstance) -> None:
+        args = tuple(self._resolve(a) for a in task.args)
+        kwargs = {k: self._resolve(v) for k, v in task.kwargs.items()}
+        err: Optional[BaseException] = None
+        result = None
+        attempts = task.defn.max_retries + 1
+        for attempt in range(attempts):
+            try:
+                result = task.defn.fn(*args, **kwargs)
+                err = None
+                break
+            except BaseException as e:  # noqa: BLE001 — report at barrier
+                err = e
+                task.retries = attempt + 1
+                if attempt + 1 < attempts:
+                    time.sleep(min(0.05 * (2 ** attempt), 1.0))
+        task.end_time = self.now()
+        if err is not None:
+            task.error = err
+            task.state = TaskState.FAILED
+        if task.defn.returns > 1 and isinstance(result, tuple):
+            for f, v in zip(task.futures, result):
+                f.set_value(v)
+        else:
+            task.futures[0].set_value(result)
+        with self._cv:
+            self.runtime._handle_completion(task)
+            if task.error is not None:
+                self._failed.append(task)
+            self._cv.notify_all()
+
+    def on_submitted(self) -> None:
+        with self._cv:
+            self.runtime.scheduler.schedule_pass()
+
+    def drain(self, predicate: Callable[[], bool]) -> None:
+        rt = self.runtime
+        with self._cv:
+            while True:
+                rt.scheduler.schedule_pass()
+                if self._failed:
+                    t = self._failed[0]
+                    raise RuntimeError(
+                        f"task {t.defn.name}#{t.tid} failed after "
+                        f"{t.retries} attempt(s)") from t.error
+                if predicate():
+                    return
+                if not rt.scheduler.running and rt.scheduler.ready:
+                    rt.scheduler.assert_not_stuck()
+                    continue
+                self._cv.wait(timeout=self._poll)
+
+    def shutdown(self) -> None:
+        for p in self._pools.values():
+            p.shutdown(wait=True)
+        self._pools.clear()

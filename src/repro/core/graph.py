@@ -1,0 +1,99 @@
+"""Data-dependency detection (paper §4.1.2).
+
+Futures passed as arguments create read-after-write dependencies on the
+producing task. DataHandles passed to parameters declared INOUT/OUT get
+COMPSs-style version bumps: a writer depends on the previous writer *and*
+on every reader of the current version (serialising in-place updates).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Iterable
+
+from .task import (DataHandle, Direction, Future, TaskInstance, TaskState)
+
+
+def _param_names(defn) -> list[str]:
+    cache = getattr(defn, "_param_names", None)
+    if cache is None:
+        try:
+            cache = list(inspect.signature(defn.fn).parameters)
+        except (TypeError, ValueError):
+            cache = []
+        defn._param_names = cache
+    return cache
+
+
+def iter_futures(obj, _depth=0):
+    """Futures in an argument, recursing through lists/tuples/dicts (a task
+    may take e.g. a list of futures — the checkpoint commit barrier does)."""
+    if isinstance(obj, Future):
+        yield obj
+    elif _depth < 4:
+        if isinstance(obj, (list, tuple)):
+            for v in obj:
+                yield from iter_futures(v, _depth + 1)
+        elif isinstance(obj, dict):
+            for v in obj.values():
+                yield from iter_futures(v, _depth + 1)
+
+
+class TaskGraph:
+    def __init__(self):
+        self.tasks: dict[int, TaskInstance] = {}
+        self.unfinished: int = 0
+        self._missing_deps: dict[int, int] = {}  # tid -> #unfinished deps
+
+    def add(self, task: TaskInstance) -> bool:
+        """Register a task; returns True if it is immediately ready."""
+        names = _param_names(task.defn)
+        bound = list(zip(names, task.args)) + list(task.kwargs.items())
+
+        deps: set[TaskInstance] = set()
+        for pname, arg in bound:
+            if not isinstance(arg, DataHandle):
+                for fut in iter_futures(arg):
+                    if fut.task.state not in (TaskState.DONE,):
+                        deps.add(fut.task)
+            if isinstance(arg, DataHandle):
+                direction = task.defn.param_dirs.get(pname, Direction.IN)
+                if direction == Direction.IN:
+                    if arg.last_writer is not None and \
+                            arg.last_writer.state != TaskState.DONE:
+                        deps.add(arg.last_writer)
+                    arg.readers_since_write.append(task)
+                else:  # INOUT / OUT: write-after-write + write-after-read
+                    if direction == Direction.INOUT and arg.last_writer is not None \
+                            and arg.last_writer.state != TaskState.DONE:
+                        deps.add(arg.last_writer)
+                    for r in arg.readers_since_write:
+                        if r.state != TaskState.DONE and r is not task:
+                            deps.add(r)
+                    arg.version += 1
+                    arg.last_writer = task
+                    arg.readers_since_write = []
+
+        task.deps = {d.tid for d in deps}
+        for d in deps:
+            d.children.append(task)
+        self.tasks[task.tid] = task
+        self._missing_deps[task.tid] = len(task.deps)
+        self.unfinished += 1
+        if not task.deps:
+            task.state = TaskState.READY
+            return True
+        return False
+
+    def complete(self, task: TaskInstance) -> list[TaskInstance]:
+        """Mark done; return children that became ready."""
+        task.state = TaskState.DONE
+        self.unfinished -= 1
+        newly_ready = []
+        for child in task.children:
+            if child.state != TaskState.PENDING:
+                continue
+            self._missing_deps[child.tid] -= 1
+            if self._missing_deps[child.tid] == 0:
+                child.state = TaskState.READY
+                newly_ready.append(child)
+        return newly_ready

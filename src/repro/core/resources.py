@@ -1,0 +1,137 @@
+"""Resource descriptions: workers, storage devices, bandwidth accounting.
+
+Mirrors the COMPSs resource-description file (paper §4.1.2) extended with a
+maximum I/O bandwidth per storage device (paper §4.2.2). Bandwidth is
+accounted per *device*: node-local SSDs are one device per worker (the
+paper's MareNostrum-4 setup); a shared filesystem / object store is a single
+device referenced by every worker (the pod-scale checkpoint case).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class StorageDevice:
+    """A storage device with a bandwidth budget for constraint accounting.
+
+    ``bandwidth`` is the budget the scheduler allocates constraint values
+    from (MB/s). The congestion model parameters describe how the *achieved*
+    aggregate throughput behaves as a function of the number of concurrent
+    streams (see storage_model.py); they drive the simulator and default to
+    the MareNostrum-4 node-local SSD calibration from the paper.
+    """
+
+    name: str
+    bandwidth: float = 450.0        # MB/s, budget for storageBW accounting
+    per_stream_cap: float = 8.0     # MB/s a single stream can achieve
+    congestion_alpha: float = 0.004  # linear penalty per stream past the knee
+    congestion_beta: float = 1e-5   # quadratic term: fsync seek-thrash at
+    #                                 very high concurrency is superlinear
+    congestion_knee: Optional[int] = None  # default: bandwidth/per_stream_cap
+
+    def __post_init__(self):
+        if self.congestion_knee is None:
+            self.congestion_knee = max(1, int(self.bandwidth / self.per_stream_cap))
+        # --- dynamic accounting state ---
+        self.available_bw: float = self.bandwidth
+        self.active_io: int = 0          # running I/O tasks on this device
+        self.bytes_written: float = 0.0  # MB, for throughput reporting
+
+    # -- budget accounting (scheduler-facing) --------------------------------
+    def can_allocate(self, bw: float) -> bool:
+        return bw <= self.available_bw + 1e-9
+
+    def allocate(self, bw: float) -> None:
+        if not self.can_allocate(bw):
+            raise RuntimeError(
+                f"over-allocating device {self.name}: want {bw}, have {self.available_bw}")
+        self.available_bw -= bw
+        self.active_io += 1
+
+    def release(self, bw: float) -> None:
+        self.available_bw += bw
+        self.active_io -= 1
+        if self.active_io < 0 or self.available_bw > self.bandwidth + 1e-6:
+            raise RuntimeError(f"bandwidth accounting underflow on {self.name}")
+
+    def reset(self):
+        self.available_bw = self.bandwidth
+        self.active_io = 0
+        self.bytes_written = 0.0
+
+
+@dataclass
+class WorkerNode:
+    """A worker with a compute execution platform and an I/O execution
+    platform (paper Fig. 7)."""
+
+    name: str
+    cpus: int = 48
+    io_executors: int = 225
+    storage: StorageDevice = None  # node-local device (or shared instance)
+
+    def __post_init__(self):
+        if self.storage is None:
+            self.storage = StorageDevice(name=f"{self.name}-ssd")
+        self.free_cpus: int = self.cpus
+        self.free_io_executors: int = self.io_executors
+        self.learning_owner = None   # signature owning this node as an
+        #                              active-learning node (paper §4.2.3B)
+
+    def reset(self):
+        self.free_cpus = self.cpus
+        self.free_io_executors = self.io_executors
+        self.learning_owner = None
+        self.storage.reset()
+
+
+@dataclass
+class Cluster:
+    """The resource pool the scheduler draws from.
+
+    ``shared_workdir`` mirrors the paper: when True, task outputs live on a
+    shared FS so I/O tasks go to the first candidate node; when False the
+    scheduler prefers data locality.
+    """
+
+    workers: list = field(default_factory=list)
+    shared_workdir: bool = True
+
+    @staticmethod
+    def make(n_workers: int = 12, cpus: int = 48, io_executors: int = 225,
+             device_bw: float = 450.0, per_stream_cap: float = 8.0,
+             congestion_alpha: float = 0.004,
+             shared_storage: bool = False) -> "Cluster":
+        """Build the paper's 12-node MareNostrum-4-like cluster by default."""
+        shared_dev = StorageDevice(
+            name="shared-fs", bandwidth=device_bw,
+            per_stream_cap=per_stream_cap,
+            congestion_alpha=congestion_alpha) if shared_storage else None
+        workers = []
+        for i in range(n_workers):
+            dev = shared_dev or StorageDevice(
+                name=f"w{i}-ssd", bandwidth=device_bw,
+                per_stream_cap=per_stream_cap,
+                congestion_alpha=congestion_alpha)
+            workers.append(WorkerNode(
+                name=f"w{i}", cpus=cpus, io_executors=io_executors, storage=dev))
+        return Cluster(workers=workers)
+
+    @property
+    def devices(self):
+        seen, out = set(), []
+        for w in self.workers:
+            if id(w.storage) not in seen:
+                seen.add(id(w.storage))
+                out.append(w.storage)
+        return out
+
+    def reset(self):
+        for w in self.workers:
+            w.reset()
+
+    def total_cpus(self) -> int:
+        return sum(w.cpus for w in self.workers)

@@ -1,0 +1,202 @@
+"""IORuntime facade + PyCOMPSs-style decorators (paper Listings 1-5).
+
+    from repro.core import task, io, constraint, IORuntime, INOUT
+
+    @constraint(storageBW="auto")
+    @io
+    @task()
+    def checkpoint(block, i):
+        ...  # real write+fsync in RealBackend; modelled in SimBackend
+
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        for i in range(3):
+            block = generate_block()          # returns a Future
+            checkpoint(block, i, io_mb=290)   # overlaps with scale()
+            results.append(scale(block))
+        rt.barrier()
+
+``io_mb=`` / ``duration=`` call-time kwargs feed the simulator's execution
+model and are stripped before the user function sees its arguments.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from .backends import Backend, RealBackend, SimBackend
+from .constraints import parse_storage_bw
+from .graph import TaskGraph
+from .resources import Cluster
+from .scheduler import Scheduler
+from .task import (Direction, Future, SimSpec, TaskDef, TaskInstance,
+                   TaskState, TaskType)
+
+_current: threading.local = threading.local()
+
+
+def current_runtime() -> Optional["IORuntime"]:
+    return getattr(_current, "rt", None)
+
+
+class TaskFunction:
+    """A decorated function: direct call without a runtime, task submission
+    inside a runtime context."""
+
+    def __init__(self, defn: TaskDef):
+        self.defn = defn
+        self.__name__ = defn.name
+
+    def __call__(self, *args, **kwargs):
+        rt = current_runtime()
+        sim = SimSpec(duration=float(kwargs.pop("duration", 0.0)),
+                      io_bytes=float(kwargs.pop("io_mb", 0.0)))
+        bw_override = kwargs.pop("storage_bw", None)
+        if rt is None:
+            return self.defn.fn(*args, **kwargs)
+        return rt.submit(self.defn, args, kwargs, sim,
+                         storage_bw=parse_storage_bw(bw_override)
+                         if bw_override is not None else None)
+
+
+def _as_taskfn(fn) -> TaskFunction:
+    if isinstance(fn, TaskFunction):
+        return fn
+    return TaskFunction(TaskDef(fn=fn, name=fn.__name__))
+
+
+def task(returns: int = 0, **param_dirs):
+    """@task(returns=1, data=INOUT) — declare a function as a task."""
+    dirs = {}
+    for name, d in param_dirs.items():
+        if not isinstance(d, Direction):
+            raise TypeError(f"direction for {name!r} must be IN/INOUT/OUT")
+        dirs[name] = d
+
+    def wrap(fn):
+        tf = _as_taskfn(fn)
+        tf.defn.returns = returns
+        tf.defn.param_dirs.update(dirs)
+        return tf
+    return wrap
+
+
+def io(fn):
+    """@io — mark the task as an I/O task (zero computing units; scheduled on
+    the I/O execution platform, overlapping compute tasks)."""
+    tf = _as_taskfn(fn)
+    tf.defn.task_type = TaskType.IO
+    tf.defn.computing_units = 0
+    return tf
+
+
+def constraint(computingUnits: int | None = None, storageBW=None,
+               maxRetries: int | None = None):
+    """@constraint(computingUnits=2) / @constraint(storageBW="auto(2,256,2)")."""
+    def wrap(fn):
+        tf = _as_taskfn(fn)
+        if computingUnits is not None:
+            tf.defn.computing_units = int(computingUnits)
+        if storageBW is not None:
+            tf.defn.storage_bw = parse_storage_bw(storageBW)
+        if maxRetries is not None:
+            tf.defn.max_retries = int(maxRetries)
+        return tf
+    return wrap
+
+
+def wait_on(*futures):
+    """compss_wait_on: block until futures resolve; return their values."""
+    rt = current_runtime()
+    if rt is None:
+        raise RuntimeError("wait_on outside an IORuntime context")
+    return rt.wait_on(*futures)
+
+
+class IORuntime:
+    def __init__(self, cluster: Cluster, backend: Backend | str = "sim"):
+        self.cluster = cluster
+        if isinstance(backend, str):
+            backend = SimBackend() if backend == "sim" else RealBackend()
+        self.backend = backend
+        self.lock = threading.RLock()
+        self.graph = TaskGraph()
+        self.scheduler = Scheduler(cluster, launch=self.backend.launch)
+        self.backend.bind(self)
+        self._entered = False
+
+    # ---------------------------------------------------------------- context
+    def __enter__(self):
+        _current.rt = self
+        self._entered = True
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        try:
+            if exc_type is None:
+                self.barrier(final=True)
+        finally:
+            _current.rt = None
+            self.backend.shutdown()
+        return False
+
+    # ------------------------------------------------------------- submission
+    def submit(self, defn: TaskDef, args, kwargs, sim: SimSpec,
+               storage_bw=None):
+        with self.lock:
+            inst = TaskInstance(defn, args, kwargs, sim=sim,
+                                storage_bw=storage_bw)
+            inst.submit_time = self.backend.now()
+            ready = self.graph.add(inst)
+            if ready:
+                self.scheduler.make_ready(inst)
+            self.backend.on_submitted()
+        if defn.returns > 1:
+            return tuple(inst.futures)
+        return inst.futures[0]
+
+    # ------------------------------------------------------------- completion
+    def _handle_completion(self, task: TaskInstance) -> None:
+        # called by the backend (sim loop / worker thread under runtime lock)
+        self.scheduler.on_complete(task)
+        if task.state != TaskState.FAILED:
+            for child in self.graph.complete(task):
+                self.scheduler.make_ready(child)
+        else:
+            self.graph.unfinished -= 1  # failed task leaves the graph
+
+    # ------------------------------------------------------------------ waits
+    def barrier(self, final: bool = False) -> None:
+        if final:
+            with self.lock:
+                self.scheduler.end_of_stream()
+        self.backend.drain(lambda: self.graph.unfinished == 0)
+
+    def wait_on(self, *futures):
+        self.backend.drain(lambda: all(f.resolved() for f in futures))
+        vals = [f.value() for f in futures]
+        return vals[0] if len(vals) == 1 else vals
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        done = self.scheduler.completed
+        io_tasks = [t for t in done if t.is_io]
+        out = {
+            "makespan": self.backend.now(),
+            "n_tasks": len(done),
+            "n_io_tasks": len(io_tasks),
+            "avg_io_task_time": (sum(t.duration for t in io_tasks) / len(io_tasks))
+            if io_tasks else 0.0,
+            "tuners": {s: t.summary() for s, t in self.scheduler.tuners.items()},
+        }
+        be = self.backend
+        if isinstance(be, SimBackend):
+            out.update({
+                "io_busy_time": be.io_busy_time,
+                "compute_busy_time": be.compute_busy_time,
+                "overlap_time": be.overlap_time,
+                "total_io_mb": be.total_io_mb,
+                "io_throughput_mbs": (be.total_io_mb / be.io_busy_time)
+                if be.io_busy_time > 0 else 0.0,
+                "peak_io_mbs": be.peak_io_mbs,
+            })
+        return out

@@ -1,0 +1,217 @@
+"""The I/O-aware scheduler (paper §4.2).
+
+Compute tasks are placed by computing-unit availability (the compute
+execution platform). I/O tasks are placed by *I/O executor* availability and
+*storage-bandwidth* budget (the I/O execution platform) — their computing
+requirement is zero, so they overlap with compute tasks (paper §4.2.1).
+
+Auto-constrained tasks are routed through a per-signature :class:`AutoTuner`.
+While a tuner is learning, its tasks run only on a dedicated
+*active-learning node* and no other I/O tasks are co-scheduled there
+(paper §4.2.3B). Once learning finishes the node is released and the
+objective function picks the constraint, re-evaluated on every arrival.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from .autotune import AutoTuner
+from .constraints import AutoSpec, StaticSpec, is_auto
+from .resources import Cluster, StorageDevice, WorkerNode
+from .task import TaskInstance, TaskState, TaskType
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+class Scheduler:
+    def __init__(self, cluster: Cluster,
+                 launch: Callable[[TaskInstance, WorkerNode], None]):
+        self.cluster = cluster
+        self._launch = launch
+        self.ready: list[TaskInstance] = []
+        self.running: set[int] = set()
+        self.tuners: dict[str, AutoTuner] = {}
+        self.learning_nodes: dict[str, WorkerNode] = {}
+        self.completed: list[TaskInstance] = []
+        self.launch_log: list[tuple[float, str, str]] = []  # (tid, sig, worker)
+
+    # ------------------------------------------------------------------ utils
+    def tuner_for(self, task: TaskInstance) -> AutoTuner:
+        sig = task.defn.signature
+        if sig not in self.tuners:
+            spec = task.storage_bw
+            assert isinstance(spec, AutoSpec)
+            # the device model the tuner reasons about: the (first) device its
+            # tasks will run on. Homogeneous devices assumed per signature.
+            w = self.cluster.workers[0]
+            self.tuners[sig] = AutoTuner(
+                sig, spec, device_bw=w.storage.bandwidth,
+                io_executors=w.io_executors)
+        return self.tuners[sig]
+
+    def _acquire_learning_node(self, sig: str) -> Optional[WorkerNode]:
+        node = self.learning_nodes.get(sig)
+        if node is not None:
+            return node
+        for w in self.cluster.workers:
+            if w.learning_owner is None:
+                w.learning_owner = sig
+                self.learning_nodes[sig] = w
+                return w
+        return None  # all nodes busy learning other signatures: wait
+
+    def _release_learning_node(self, sig: str) -> None:
+        node = self.learning_nodes.pop(sig, None)
+        if node is not None:
+            node.learning_owner = None
+
+    def n_ready_of(self, sig: str) -> int:
+        return sum(1 for t in self.ready if t.defn.signature == sig)
+
+    # -------------------------------------------------------------- submission
+    def make_ready(self, task: TaskInstance) -> None:
+        self.ready.append(task)
+
+    # -------------------------------------------------------------- scheduling
+    def schedule_pass(self) -> int:
+        """Try to place every ready task; returns number launched."""
+        launched = 0
+        progress = True
+        while progress:
+            progress = False
+            for task in list(self.ready):
+                if self._try_place(task):
+                    self.ready.remove(task)
+                    launched += 1
+                    progress = True
+        return launched
+
+    def _try_place(self, task: TaskInstance) -> bool:
+        if task.defn.task_type == TaskType.COMPUTE:
+            return self._place_compute(task)
+        return self._place_io(task)
+
+    def _place_compute(self, task: TaskInstance) -> bool:
+        cu = task.defn.computing_units
+        for w in self.cluster.workers:
+            if w.free_cpus >= cu:
+                w.free_cpus -= cu
+                self._start(task, w, bw=0.0)
+                return True
+        return False
+
+    def _place_io(self, task: TaskInstance) -> bool:
+        spec = task.storage_bw
+        if is_auto(spec):
+            return self._place_auto_io(task)
+        bw = spec.value if isinstance(spec, StaticSpec) else 0.0
+        # sanity: an unsatisfiable static constraint is a config error
+        if bw > 0 and all(w.storage.bandwidth < bw for w in self.cluster.workers):
+            raise SchedulerError(
+                f"storageBW={bw} exceeds every device's bandwidth")
+        for w in self._io_candidates(task):
+            if w.learning_owner is not None:
+                continue  # active-learning node: keep it isolated
+            if w.free_io_executors <= 0:
+                continue
+            if bw > 0 and not w.storage.can_allocate(bw):
+                continue
+            w.free_io_executors -= 1
+            if bw >= 0:
+                w.storage.allocate(bw)
+            self._start(task, w, bw=bw)
+            return True
+        return False
+
+    def _place_auto_io(self, task: TaskInstance) -> bool:
+        tuner = self.tuner_for(task)
+        sig = task.defn.signature
+        if tuner.learning():
+            node = self._acquire_learning_node(sig)
+            if node is None:
+                return False
+            c = tuner.current_constraint()
+            if node.free_io_executors <= 0 or not node.storage.can_allocate(c):
+                return False
+            if not tuner.admit():
+                return False  # current epoch full; wait for the next one
+            node.free_io_executors -= 1
+            node.storage.allocate(c)
+            task.epoch = tuner.epoch
+            self._start(task, node, bw=c)
+            return True
+        # learning done: objective fn, re-evaluated for the current backlog
+        n = self.n_ready_of(sig)
+        c = tuner.choose(max(1, n))
+        for w in self._io_candidates(task):
+            if w.learning_owner is not None:
+                continue
+            if w.free_io_executors <= 0 or not w.storage.can_allocate(c):
+                continue
+            w.free_io_executors -= 1
+            w.storage.allocate(c)
+            self._start(task, w, bw=c)
+            return True
+        return False
+
+    def _io_candidates(self, task: TaskInstance):
+        # shared working directory -> first candidate node (paper §4.2.1);
+        # otherwise honour data locality (inputs' producing workers first).
+        if self.cluster.shared_workdir:
+            return self.cluster.workers
+        pref = []
+        from .task import Future
+        for a in list(task.args) + list(task.kwargs.values()):
+            if isinstance(a, Future) and a.task.worker is not None:
+                pref.append(a.task.worker)
+        rest = [w for w in self.cluster.workers if w not in pref]
+        return pref + rest
+
+    def _start(self, task: TaskInstance, worker: WorkerNode, bw: float) -> None:
+        task.worker = worker
+        task.granted_bw = bw
+        task.state = TaskState.RUNNING
+        self.running.add(task.tid)
+        self.launch_log.append((task.tid, task.defn.signature, worker.name))
+        self._launch(task, worker)
+
+    # -------------------------------------------------------------- completion
+    def on_complete(self, task: TaskInstance) -> None:
+        """Release resources + autotune bookkeeping. The backend/runtime is
+        responsible for graph completion and follow-up scheduling."""
+        self.running.discard(task.tid)
+        w = task.worker
+        if task.defn.task_type == TaskType.COMPUTE:
+            w.free_cpus += task.defn.computing_units
+        else:
+            w.free_io_executors += 1
+            w.storage.release(task.granted_bw)
+        if task.epoch is not None:
+            tuner = self.tuners[task.defn.signature]
+            tuner.on_task_complete(task.duration)
+            if not tuner.learning():
+                self._release_learning_node(task.defn.signature)
+        self.completed.append(task)
+
+    def end_of_stream(self) -> None:
+        """Signal that no more tasks will be submitted (final barrier):
+        lets partially-filled learning epochs conclude."""
+        for sig, tuner in self.tuners.items():
+            if tuner.learning():
+                tuner.end_of_stream()
+                if not tuner.learning():
+                    self._release_learning_node(sig)
+
+    # ---------------------------------------------------------------- sanity
+    def assert_not_stuck(self) -> None:
+        if self.ready and not self.running:
+            # one legitimate transient: an auto task waiting for a learning
+            # node held by a tuner whose epoch is waiting for more arrivals.
+            self.end_of_stream()
+            if self.schedule_pass() == 0 and self.ready and not self.running:
+                names = [t.defn.name for t in self.ready[:5]]
+                raise SchedulerError(
+                    f"scheduler stuck: {len(self.ready)} ready tasks "
+                    f"(e.g. {names}) but nothing running/placeable")

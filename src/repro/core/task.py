@@ -1,0 +1,169 @@
+"""Task model for the I/O-aware runtime.
+
+Mirrors PyCOMPSs semantics (paper §4.1.1): functions become tasks via
+decorators; parameter directionality (IN/INOUT/OUT) drives dependency
+detection; tasks return Futures; ``@io`` marks a task as an I/O task whose
+*computing* requirement is zero (paper §4.2.1) so it is scheduled on the I/O
+execution platform and may overlap with compute tasks.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from .constraints import ConstraintSpec
+
+
+class Direction(enum.Enum):
+    IN = "in"
+    INOUT = "inout"
+    OUT = "out"
+
+
+IN = Direction.IN
+INOUT = Direction.INOUT
+OUT = Direction.OUT
+
+
+class TaskType(enum.Enum):
+    COMPUTE = "compute"
+    IO = "io"
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"      # submitted, deps not satisfied
+    READY = "ready"          # deps satisfied, waiting for resources
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclass
+class TaskDef:
+    """Static definition attached to a decorated function."""
+
+    fn: Callable
+    name: str
+    task_type: TaskType = TaskType.COMPUTE
+    computing_units: int = 1
+    storage_bw: Optional[ConstraintSpec] = None
+    param_dirs: dict = field(default_factory=dict)  # name -> Direction
+    returns: int = 0
+    max_retries: int = 0  # I/O fault tolerance: bounded retries
+
+    @property
+    def signature(self) -> str:
+        return self.name
+
+
+class Future:
+    """Future returned by a task invocation (one per declared return)."""
+
+    __slots__ = ("task", "index", "_value", "_set")
+
+    def __init__(self, task: "TaskInstance", index: int = 0):
+        self.task = task
+        self.index = index
+        self._value = None
+        self._set = False
+
+    def set_value(self, value: Any) -> None:
+        self._value = value
+        self._set = True
+
+    def resolved(self) -> bool:
+        return self._set
+
+    def value(self) -> Any:
+        return self._value
+
+    def __repr__(self) -> str:
+        return f"<Future {self.task.defn.name}#{self.task.tid}[{self.index}]>"
+
+
+class DataHandle:
+    """Mutable datum tracked with versions (COMPSs renaming).
+
+    Pass a DataHandle to an INOUT/OUT parameter to get write-after-read /
+    write-after-write serialization.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self, value: Any = None, name: str | None = None):
+        self.did = next(DataHandle._ids)
+        self.name = name or f"data{self.did}"
+        self.value = value
+        # dependency bookkeeping (owned by TaskGraph)
+        self.last_writer: Optional["TaskInstance"] = None
+        self.readers_since_write: list["TaskInstance"] = []
+        self.version = 0
+
+    def __repr__(self) -> str:
+        return f"<DataHandle {self.name} v{self.version}>"
+
+
+@dataclass
+class SimSpec:
+    """Simulation-mode execution model for a task instance."""
+
+    duration: float = 0.0        # compute time, seconds (virtual)
+    io_bytes: float = 0.0        # MB to write/read for I/O tasks
+
+
+class TaskInstance:
+    _ids = itertools.count()
+
+    def __init__(self, defn: TaskDef, args: tuple, kwargs: dict,
+                 sim: SimSpec | None = None,
+                 storage_bw: Optional[ConstraintSpec] = None):
+        self.tid = next(TaskInstance._ids)
+        self.defn = defn
+        self.args = args
+        self.kwargs = kwargs
+        self.sim = sim or SimSpec()
+        # per-instance constraint override (else defn.storage_bw)
+        self.storage_bw = storage_bw if storage_bw is not None else defn.storage_bw
+        self.state = TaskState.PENDING
+        self.deps: set[int] = set()          # tids this task waits on
+        self.children: list[TaskInstance] = []
+        self.futures = [Future(self, i) for i in range(max(defn.returns, 1))]
+        # filled by the scheduler/backend
+        self.worker = None
+        self.granted_bw: float = 0.0         # bandwidth reserved at launch
+        self.submit_time: float = 0.0
+        self.start_time: float = 0.0
+        self.end_time: float = 0.0
+        self.epoch = None                    # learning epoch membership
+        self.retries = 0
+        self.error: Optional[BaseException] = None
+
+    @property
+    def duration(self) -> float:
+        return self.end_time - self.start_time
+
+    @property
+    def is_io(self) -> bool:
+        return self.defn.task_type == TaskType.IO
+
+    def future(self) -> Future:
+        return self.futures[0]
+
+    def __repr__(self) -> str:
+        return f"<Task {self.defn.name}#{self.tid} {self.state.value}>"
+
+
+class Barrier:
+    """Completion latch used by wait_on / runtime barrier (real backend)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+
+    def release(self):
+        self._event.set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._event.wait(timeout)

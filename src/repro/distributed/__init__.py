@@ -1,0 +1,3 @@
+from .sharding import (LOGICAL_RULES, STRATEGIES, MeshContext, batch_axes,
+                       current_mesh, logical_to_sharding, mesh_context,
+                       shard_activation, shard_params)

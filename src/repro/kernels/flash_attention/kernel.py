@@ -1,0 +1,123 @@
+"""Flash attention for TPU (pl.pallas_call + explicit BlockSpec VMEM tiling).
+
+Online-softmax tiling: grid (B, KV, G, nq, nk); the nk axis is sequential
+("arbitrary") and carries running max / denominator / accumulator in VMEM
+scratch; q/k/v blocks are MXU-aligned (block sizes multiples of 128 on the
+contracting dims; head_dim is the lane dim). Causal and sliding-window masks
+are applied blockwise; fully-masked blocks short-circuit via pl.when.
+
+TPU adaptation notes (DESIGN.md): the CUDA flash algorithm's warp-level
+shuffles have no TPU analogue — the TPU-native formulation keeps the
+(block_q, head_dim) accumulator resident in VMEM across the sequential nk
+grid dimension and lets the MXU do the (block_q x hd) @ (hd x block_k)
+products; masking is vectorised on the VPU with 2-D iotas.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, nk: int, seq_len: int):
+    ki = pl.program_id(4)
+    qi = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # block-level reachability: skip fully-masked tiles
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + block_q - 1
+    if window:
+        reachable = jnp.logical_and(
+            reachable, k_start + block_k - 1 > q_start - window) \
+            if causal else (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(reachable if (causal or window) else True)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0,
+                        block_q=512, block_k=512, interpret=False):
+    """q: (B,S,H,hd) bf16/f32; k, v: (B,S,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = pl.cdiv(S, block_q)
+    nk = pl.cdiv(S, block_k)
+    grid = (B, KV, G, nq, nk)
+    kern = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, nk=nk, seq_len=S)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, kv, g, qi, ki: (b, qi, kv * G + g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, kv, g, qi, ki: (b, ki, kv, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, kv, g, qi, ki: (b, ki, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, kv, g, qi, ki: (b, qi, kv * G + g, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max
+            pltpu.VMEM((block_q,), jnp.float32),       # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out

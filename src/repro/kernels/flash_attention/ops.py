@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Forward runs the Pallas kernel (interpret=True on CPU); backward is a
+custom_vjp that recomputes attention through the jnp oracle — numerically
+the same math, so training through the kernel is supported without a
+dedicated backward kernel (a future perf iteration).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, block_q=512, block_k=512):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_on_cpu())
+
+
+def _fwd(q, k, v, causal, window, block_q, block_k):
+    out = flash_attention(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_ref(q, k, v, causal=causal, window=window),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal /
+bidirectional / sliding-window). Shapes: q (B,S,H,hd), k/v (B,S,KV,hd)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool) if not causal else (kpos <= qpos)
+    if window:
+        mask = mask & (kpos > qpos - window)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, H, hd)

@@ -1,0 +1,99 @@
+"""Mamba2 SSD chunked scan for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+Grid (b, H/block_h, nc): the chunk axis is sequential ("arbitrary") and
+carries the (block_h, N, P) SSM state in VMEM scratch across chunks — the
+inter-chunk recurrence never touches HBM. Within a chunk the quadratic
+(Q x Q) intra-chunk term runs on the MXU; B/C projections are shared across
+heads (n_groups=1), so their blocks are broadcast over the head grid axis.
+
+TPU adaptation (DESIGN.md): the original SSD CUDA kernel leans on warp-wide
+segsum primitives; here the segment-sum is a VPU cumsum + broadcasted
+subtraction, and state passing is VMEM-resident scratch rather than
+shared-memory tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(la_ref, x_ref, b_ref, c_ref, dt_ref, d_ref,
+                y_ref, hlast_ref, h_ref, *, nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    la = la_ref[0, 0].astype(jnp.float32)          # (Q, bh)
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, bh, P)
+    bm = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q, bh)
+    dvec = d_ref[...].astype(jnp.float32)          # (bh,)
+
+    lcum = jnp.cumsum(la, axis=0)                  # (Q, bh)
+    seg = lcum[:, None, :] - lcum[None, :, :]      # (Q, Q, bh)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where((jj <= ii)[..., None], jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = cb[..., None] * L                          # (Q, Q, bh)
+    xdt = x * dt[..., None]                        # (Q, bh, P)
+    y = jnp.einsum("ijh,jhp->ihp", w, xdt)         # intra-chunk
+    h = h_ref[...]                                 # (bh, N, P)
+    y = y + jnp.einsum("in,hnp->ihp", cm, h) * jnp.exp(lcum)[..., None]
+    decay_end = jnp.exp(lcum[-1:, :] - lcum)       # (Q, bh)
+    s_c = jnp.einsum("jn,jhp->hnp", bm, xdt * decay_end[..., None])
+    h_new = h * jnp.exp(lcum[-1, :])[:, None, None] + s_c
+    h_ref[...] = h_new
+    y = y + dvec[None, :, None] * x
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        hlast_ref[0] = h_new.astype(hlast_ref.dtype)
+
+
+def ssd_scan_fwd(x, dt, B, C, la, D, *, block_h: int = 0, interpret=False):
+    """x (b,nc,Q,H,P); dt,la (b,nc,Q,H); B,C (b,nc,Q,N); D (H,).
+    Returns (y (b, nc*Q, H, P), h_last (b, H, N, P))."""
+    b, nc, Q, H, P = x.shape
+    N = B.shape[-1]
+    block_h = block_h or min(H, 8)
+    assert H % block_h == 0
+    nh = H // block_h
+    grid = (b, nh, nc)
+    kern = functools.partial(_ssd_kernel, nc=nc, chunk=Q)
+    y, h_last = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, block_h), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, Q, block_h, P),
+                         lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, Q, block_h), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((block_h,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, block_h, P),
+                         lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, block_h, N, P), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, Q, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(la, x, B, C, dt, D)
+    return y.reshape(b, nc * Q, H, P), h_last

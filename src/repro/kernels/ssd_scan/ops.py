@@ -1,0 +1,29 @@
+"""jit'd wrapper for the SSD scan kernel; backward recomputes through the
+jnp oracle (custom_vjp), so cfg.use_ssd_kernel works under jax.grad."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssd_scan_fwd
+from .ref import ssd_scan_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@jax.custom_vjp
+def ssd_scan(x, dt, B, C, la, D):
+    return ssd_scan_fwd(x, dt, B, C, la, D, interpret=_on_cpu())
+
+
+def _fwd(x, dt, B, C, la, D):
+    return ssd_scan(x, dt, B, C, la, D), (x, dt, B, C, la, D)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ssd_scan_ref, *res)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,53 @@
+"""Multi-host/TPU-pod process wiring (real-cluster path).
+
+On an actual pod fleet every host runs the same entrypoint;
+``initialize_cluster()`` wires jax.distributed from environment (TPU
+metadata when present, otherwise COORDINATOR_ADDR/NUM_PROCESSES/PROCESS_ID
+as used by launch_pod.sh), and ``global_runtime_cluster()`` builds the
+I/O-aware runtime's resource view of the fleet: one worker entry per host,
+all referencing the shared checkpoint filesystem device so the paper's
+bandwidth constraints are accounted fleet-wide.
+
+Failure/elasticity protocol (DESIGN.md §7): the launcher script relaunches
+survivors with a smaller NUM_PROCESSES after a node failure; checkpoints
+store logical shardings only, so `CheckpointManager.restore(...,
+shardings=new_mesh_shardings)` re-shards onto whatever mesh the relaunch
+built (tested in tests/test_distributed_exec.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from ..core import Cluster, StorageDevice, WorkerNode
+
+
+def initialize_cluster() -> dict:
+    """Idempotent jax.distributed init from environment. Returns topology
+    info. Safe to call on single-host (no-op)."""
+    coord = os.environ.get("COORDINATOR_ADDR")
+    nproc = int(os.environ.get("NUM_PROCESSES", "1"))
+    pid = int(os.environ.get("PROCESS_ID", "0"))
+    if nproc > 1:
+        jax.distributed.initialize(coordinator_address=coord,
+                                   num_processes=nproc, process_id=pid)
+    return {"process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "local_devices": jax.local_device_count(),
+            "global_devices": jax.device_count()}
+
+
+def global_runtime_cluster(ckpt_bw_mbs: float = 2000.0,
+                           io_executors_per_host: int = 8) -> Cluster:
+    """The I/O-aware runtime's fleet view: hosts share one checkpoint-FS
+    device, so storage-bandwidth constraints bound CONCURRENT WRITERS
+    FLEET-WIDE — the pod-scale analogue of the paper's congestion control.
+    Per-host runtimes schedule only their own shards; the budget each host
+    may assume is its fair slice (coordinator-free, conservative)."""
+    n = max(jax.process_count(), 1)
+    shared = StorageDevice(name="ckpt-fs", bandwidth=ckpt_bw_mbs / n,
+                           per_stream_cap=ckpt_bw_mbs / n / 4)
+    me = WorkerNode(name=f"host{jax.process_index()}", cpus=4,
+                    io_executors=io_executors_per_host, storage=shared)
+    return Cluster(workers=[me])

@@ -1,0 +1,21 @@
+"""Production mesh builders (DESIGN.md §5).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; dryrun.py sets XLA_FLAGS before importing anything.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1x1 mesh on whatever devices exist — smoke tests / CPU runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct input specs + step-function builders for every
+(architecture × shape-cell). No device allocation: everything goes through
+jax.eval_shape and NamedSharding-annotated ShapeDtypeStructs — the pattern
+the multi-pod dry-run requires.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..distributed import batch_axes
+from ..distributed.sharding import spec_for, current_rules
+from ..models import Model
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def model_shapes_and_axes(model: Model):
+    """(params ShapeDtypeStruct tree, logical-axes tree) without allocating."""
+    box = {}
+
+    def f(r):
+        p, ax = model.init(r)
+        box["ax"] = ax
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["ax"]
+
+
+def tree_shardings(sds_tree, axes_tree, mesh):
+    def f(sds, axes):
+        return NamedSharding(mesh, spec_for(sds.shape, axes, mesh))
+    return jax.tree.map(f, sds_tree, axes_tree)
+
+
+def with_shardings(sds_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings_tree)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """ShapeDtypeStructs for the model inputs of one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    bx = batch_axes(mesh, B)
+    bspec = bx if bx else None
+    tok = partial(_sds, dtype=jnp.int32, mesh=mesh)
+    if cell.kind == "decode":
+        return {"tokens": tok((B,), spec=P(bspec))}
+    if cfg.input_mode == "tokens":
+        return {"tokens": tok((B, S), spec=P(bspec, None)),
+                "targets": tok((B, S), spec=P(bspec, None))}
+    if cfg.input_mode == "embeds":
+        return {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                               P(bspec, None, None)),
+                "targets": tok((B, S), spec=P(bspec, None))}
+    if cfg.input_mode == "vlm":
+        sv = cfg.vision_seq
+        st = S - sv
+        return {"vision_embeds": _sds((B, sv, cfg.d_model), jnp.bfloat16,
+                                      mesh, P(bspec, None, None)),
+                "tokens": tok((B, st), spec=P(bspec, None)),
+                "targets": tok((B, st), spec=P(bspec, None))}
+    raise ValueError(cfg.input_mode)
+
+
+def _ax_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def decode_state_specs(model: Model, cell: ShapeCell, mesh):
+    sds = jax.eval_shape(
+        lambda: model.init_decode_state(cell.global_batch, cell.seq_len))
+    sh = tree_shardings(sds, model.decode_state_axes(), mesh)
+    return with_shardings(sds, sh), sh
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh,
+               opt_cfg: AdamWConfig | None = None, opt_rules: dict | None = None):
+    """Returns (step_fn, example_args (SDS w/ shardings), out_shardings|None).
+
+    step_fn signatures:
+      train:   (params, opt_state, batch) -> (params, opt_state, loss, gnorm)
+      prefill: (params, batch) -> (logits, state)
+      decode:  (params, state, tokens) -> (logits, state)
+    """
+    model = Model(cfg)
+    p_sds, p_axes = model_shapes_and_axes(model)
+    p_sh = tree_shardings(p_sds, p_axes, mesh)
+    p_in = with_shardings(p_sds, p_sh)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    if cell.kind == "train":
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        o_sh = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, spec_for(s.shape, (None,) * len(s.shape), mesh))
+            if s.shape == () else None, o_sds)
+        # m/v share the params' sharding unless the strategy shards the
+        # optimizer state differently (ZeRO-1-style); count replicated
+        from ..optim.adamw import AdamWState
+        if opt_rules is not None:
+            mv_sh = jax.tree.map(
+                lambda s, ax: NamedSharding(
+                    mesh, spec_for(s.shape, ax, mesh, opt_rules)),
+                p_sds, p_axes)
+        else:
+            mv_sh = p_sh
+        o_sh = AdamWState(m=mv_sh, v=mv_sh,
+                          count=NamedSharding(mesh, P()))
+        o_in = with_shardings(o_sds, o_sh)
+        b_in = batch_specs(cfg, cell, mesh)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            new_p, new_o, gnorm = adamw_update(grads, params, opt_state,
+                                               opt_cfg)
+            return new_p, new_o, loss, gnorm
+
+        out_sh = (p_sh, o_sh, NamedSharding(mesh, P()),
+                  NamedSharding(mesh, P()))
+        return train_step, (p_in, o_in, b_in), out_sh
+
+    if cell.kind == "prefill":
+        b_in = batch_specs(cfg, cell, mesh)
+        if cfg.family == "encoder":
+            def prefill(params, batch):
+                return model.encode(params, batch)
+        else:
+            def prefill(params, batch):
+                return model.prefill(params, batch, cell.seq_len)
+        return prefill, (p_in, b_in), None
+
+    # decode
+    s_in, s_sh = decode_state_specs(model, cell, mesh)
+    b_in = batch_specs(cfg, cell, mesh)
+
+    def decode(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return decode, (p_in, s_in, b_in["tokens"]), None

@@ -1,0 +1,156 @@
+"""GQA/MQA attention with RoPE, causal / bidirectional / sliding-window
+masks, full-sequence forward (train & prefill) and single-token decode
+against a (optionally rolling) KV cache.
+
+The full-sequence path can route through the Pallas flash-attention kernel
+(``cfg.use_flash``); the default XLA path is the lowering used by the
+dry-run/roofline (kernels target real TPUs and are validated separately in
+interpret mode).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init, apply_rope
+
+
+def attn_init(rng, d_model, n_heads, n_kv, head_dim, dtype):
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "q": _init(kq, (d_model, n_heads, head_dim), s, dtype),
+        "k": _init(kk, (d_model, n_kv, head_dim), s, dtype),
+        "v": _init(kv, (d_model, n_kv, head_dim), s, dtype),
+        "o": _init(ko, (n_heads, head_dim, d_model), 1.0 / math.sqrt(n_heads * head_dim), dtype),
+    }
+    ax = {
+        "q": ("embed", "heads", "head_dim"),
+        "k": ("embed", "kv_heads", "head_dim"),
+        "v": ("embed", "kv_heads", "head_dim"),
+        "o": ("heads", "head_dim", "embed"),
+    }
+    return p, ax
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(..., Sq, Sk) boolean mask. window=0 -> unbounded."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool) \
+        if not causal else (k_pos[..., None, :] <= q_pos[..., :, None])
+    if window:
+        m = m & (k_pos[..., None, :] > q_pos[..., :, None] - window)
+    return m
+
+
+def _dense_attn(q, k, v, positions, causal, window):
+    """Materialises the full (S, S) score matrix — short sequences only."""
+    B, S, KV, hd = k.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / math.sqrt(hd)
+    mask = _mask(positions, positions, causal, window)      # (B, S, S)
+    scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32), -1e9)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, H, hd)
+
+
+def _chunked_attn(q, k, v, positions, causal, window, chunk_q):
+    """Scan over query chunks: peak score temp is (B,KV,G,Qc,S) instead of
+    (B,KV,G,S,S) — the XLA-path analogue of flash attention's tiling."""
+    B, S, KV, hd = k.shape
+    H = q.shape[2]
+    G = H // KV
+    nq = S // chunk_q
+    qg = q.reshape(B, nq, chunk_q, KV, G, hd)
+    qpos = positions.reshape(B, nq, chunk_q)
+
+    def body(_, inp):
+        qc, pc = inp                                        # (B,Qc,KV,G,hd)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qc, k) / math.sqrt(hd)
+        mask = _mask(pc, positions, causal, window)         # (B, Qc, S)
+        scores = jnp.where(mask[:, None, None],
+                           scores.astype(jnp.float32), -1e9)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", w, v)
+        return 0, o
+
+    _, outs = jax.lax.scan(body, 0, (jnp.moveaxis(qg, 1, 0),
+                                     jnp.moveaxis(qpos, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def multihead_attn(p, x, positions, *, causal=True, window=0, rope_theta=1e4,
+                   use_flash=False, flash_block=512, chunk_q_threshold=8192,
+                   chunk_q=1024):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    H, hd = p["q"].shape[1], p["q"].shape[2]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["v"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if use_flash:
+        from ..kernels.flash_attention import ops as flash_ops
+        o = flash_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                      block_q=flash_block, block_k=flash_block)
+    elif S >= chunk_q_threshold and S % chunk_q == 0:
+        o = _chunked_attn(q, k, v, positions, causal, window, chunk_q)
+    else:
+        o = _dense_attn(q, k, v, positions, causal, window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["o"])
+
+
+# --------------------------------------------------------------------------
+# Decode with (rolling) KV cache
+# --------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, KV, hd)
+    v: jax.Array          # (B, C, KV, hd)
+    slot_pos: jax.Array   # (C,) int32, position stored in each slot (-1 empty)
+
+    @staticmethod
+    def init(batch, capacity, n_kv, head_dim, dtype):
+        return KVCache(
+            k=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+            v=jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+            slot_pos=jnp.full((capacity,), -1, jnp.int32),
+        )
+
+
+def cache_capacity(seq_len: int, window: int) -> int:
+    return min(seq_len, window) if window else seq_len
+
+
+def decode_attn(p, x, cache: KVCache, pos, *, window=0, rope_theta=1e4):
+    """x: (B, D) one new token at position ``pos`` (scalar int32).
+    Returns (out (B, D), new_cache). Rolling write when window is set."""
+    B, D = x.shape
+    H, hd = p["q"].shape[1], p["q"].shape[2]
+    KV = p["k"].shape[1]
+    C = cache.k.shape[1]
+    q = jnp.einsum("bd,dhk->bhk", x, p["q"])
+    k = jnp.einsum("bd,dhk->bhk", x, p["k"])
+    v = jnp.einsum("bd,dhk->bhk", x, p["v"])
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    q = apply_rope(q[:, None], pos_b, rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos_b, rope_theta)[:, 0]
+    slot = jnp.where(window, pos % jnp.maximum(C, 1), pos).astype(jnp.int32)
+    nk = jax.lax.dynamic_update_slice_in_dim(cache.k, k[:, None], slot, axis=1)
+    nv = jax.lax.dynamic_update_slice_in_dim(cache.v, v[:, None], slot, axis=1)
+    npos = cache.slot_pos.at[slot].set(pos.astype(jnp.int32))
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bckh->bkgc", qg, nk) / math.sqrt(hd)
+    valid = (npos >= 0) & (npos <= pos)
+    if window:
+        valid = valid & (npos > pos - window)
+    scores = jnp.where(valid[None, None, None, :], scores.astype(jnp.float32), -1e9)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgc,bckh->bkgh", w, nv).reshape(B, H, hd)
+    out = jnp.einsum("bhk,hkd->bd", o, p["o"])
+    return out, KVCache(nk, nv, npos)

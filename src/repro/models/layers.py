@@ -1,0 +1,108 @@
+"""Shared building blocks (pure JAX, no flax): norms, RoPE, MLP, embeddings,
+losses. Params are plain dict pytrees; a parallel tree of *logical axis*
+tuples drives sharding (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Param spec helpers: each init returns (params, logical_axes) twin trees.
+# --------------------------------------------------------------------------
+def dense_init(rng, d_in, d_out, axes, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return _init(rng, (d_in, d_out), scale, dtype), axes
+
+
+def rmsnorm_init(d):
+    return jnp.ones((d,), dtype=jnp.float32), ("norm",)
+
+
+def rmsnorm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+    return jnp.asarray(inv)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def mlp_init(rng, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "gate": _init(k1, (d_model, d_ff), 1 / math.sqrt(d_model), dtype),
+        "up": _init(k2, (d_model, d_ff), 1 / math.sqrt(d_model), dtype),
+        "down": _init(k3, (d_ff, d_model), 1 / math.sqrt(d_ff), dtype),
+    }
+    ax = {"gate": ("embed", "mlp"), "up": ("embed", "mlp"), "down": ("mlp", "embed")}
+    return p, ax
+
+
+def mlp_apply(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["gate"])
+    u = jnp.einsum("...d,df->...f", x, p["up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["down"])
+
+
+# --------------------------------------------------------------------------
+# Embedding + loss
+# --------------------------------------------------------------------------
+def pad_vocab(v: int, multiple: int = 128) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def embed_init(rng, vocab_padded, d_model, dtype):
+    return _init(rng, (vocab_padded, d_model), 1.0, dtype), ("vocab", "embed")
+
+
+def softmax_xent(logits, labels, vocab_real: int, z_loss: float = 0.0):
+    """Cross-entropy in fp32 with padded-vocab masking. labels==-1 ignored."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad > vocab_real:
+        neg = jnp.full((vpad - vocab_real,), -1e9, dtype=jnp.float32)
+        logits = logits.at[..., vocab_real:].set(neg) if False else \
+            jnp.concatenate([logits[..., :vocab_real],
+                             jnp.broadcast_to(neg, logits[..., vocab_real:].shape)],
+                            axis=-1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    valid = labels >= 0
+    labels_safe = jnp.where(valid, labels, 0)
+    picked = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse) * valid)
+    return loss

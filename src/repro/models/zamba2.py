@@ -1,0 +1,193 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention block
+(one set of weights) applied every ``attn_every`` layers (arXiv:2411.15242).
+The shared block attends over concat(hidden, initial_embedding) — the Zamba
+trick that lets one block serve many depths. Per-application LoRA deltas are
+omitted (noted in DESIGN.md).
+
+Layers are statically segmented (python loop over attention sites, lax.scan
+within each segment) so the HLO contains exactly n_sites attention blocks —
+keeps cost_analysis faithful for the roofline.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard_activation
+from .attention import KVCache, decode_attn, multihead_attn
+from .layers import _init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from .mamba2 import MambaCache, mamba2_decode, mamba2_forward, mamba2_init
+
+
+def _sites(cfg) -> list[int]:
+    return list(range(0, cfg.n_layers, cfg.attn_every))
+
+
+def shared_block_init(rng, cfg, dtype):
+    D, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = D // H
+    ks = jax.random.split(rng, 5)
+    s = 1.0 / math.sqrt(2 * D)
+    p = {
+        "ln1": jnp.ones((2 * D,), jnp.float32),
+        "q": _init(ks[0], (2 * D, H, hd), s, dtype),
+        "k": _init(ks[1], (2 * D, KV, hd), s, dtype),
+        "v": _init(ks[2], (2 * D, KV, hd), s, dtype),
+        "o": _init(ks[3], (H, hd, D), 1.0 / math.sqrt(H * hd), dtype),
+    }
+    ax = {
+        "ln1": ("norm",),
+        "q": ("embed", "heads", "head_dim"),
+        "k": ("embed", "kv_heads", "head_dim"),
+        "v": ("embed", "kv_heads", "head_dim"),
+        "o": ("heads", "head_dim", "embed"),
+    }
+    p["ln2"], ax["ln2"] = rmsnorm_init(cfg.d_model)
+    p["mlp"], ax["mlp"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff, dtype)
+    return p, ax
+
+
+def _shared_attn_full(p, h, h0, cfg, positions):
+    xcat = jnp.concatenate([h, h0], axis=-1)
+    a_in = rmsnorm(xcat, p["ln1"], cfg.norm_eps)
+    attn_p = {k: p[k] for k in ("q", "k", "v", "o")}
+    a = multihead_attn(attn_p, a_in, positions, causal=True,
+                       window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+                       use_flash=cfg.use_flash)
+    h = h + a
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return h
+
+
+def _shared_attn_step(p, h, h0, cfg, cache, pos):
+    xcat = jnp.concatenate([h, h0], axis=-1)      # (B, 2D)
+    a_in = rmsnorm(xcat, p["ln1"], cfg.norm_eps)
+    attn_p = {k: p[k] for k in ("q", "k", "v", "o")}
+    a, new_cache = decode_attn(attn_p, a_in, cache, pos,
+                               window=cfg.sliding_window,
+                               rope_theta=cfg.rope_theta)
+    h = h + a
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps))
+    return h, new_cache
+
+
+def zamba2_init(rng, cfg):
+    from .layers import embed_init, pad_vocab
+    dtype = cfg.dtype
+    k_emb, k_m, k_a, k_h = jax.random.split(rng, 4)
+    vpad = pad_vocab(cfg.vocab_size)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = embed_init(k_emb, vpad, cfg.d_model, dtype)
+    lkeys = jax.random.split(k_m, cfg.n_layers)
+
+    def one(k):
+        kk1, kk2 = jax.random.split(k)
+        p, _ = mamba2_init(kk1, cfg.d_model, expand=cfg.ssm_expand,
+                           headdim=cfg.ssm_headdim, ssm_state=cfg.ssm_state,
+                           dtype=dtype)
+        p["ln"], _ = rmsnorm_init(cfg.d_model)
+        return p
+
+    _, ax0 = mamba2_init(jax.random.PRNGKey(0), cfg.d_model,
+                         expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                         ssm_state=cfg.ssm_state, dtype=dtype)
+    ax0["ln"] = ("norm",)
+    params["mamba_layers"] = jax.vmap(one)(lkeys)
+    axes["mamba_layers"] = jax.tree.map(
+        lambda t: ("layers",) + t, ax0, is_leaf=lambda x: isinstance(x, tuple))
+    params["shared"], axes["shared"] = shared_block_init(k_a, cfg, dtype)
+    params["final_norm"], axes["final_norm"] = rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = _init(k_h, (cfg.d_model, vpad),
+                               1.0 / math.sqrt(cfg.d_model), dtype)
+        axes["head"] = ("embed", "vocab")
+    return params, axes
+
+
+def _segments(cfg):
+    sites = _sites(cfg)
+    segs = []
+    for i, s in enumerate(sites):
+        end = sites[i + 1] if i + 1 < len(sites) else cfg.n_layers
+        segs.append((s, end))
+    return segs
+
+
+def _mamba_body(cfg):
+    def body(h, lp):
+        h = shard_activation(h)
+        out, _ = mamba2_forward(lp, rmsnorm(h, lp["ln"], cfg.norm_eps),
+                                chunk=cfg.ssm_chunk,
+                                use_kernel=cfg.use_ssd_kernel)
+        return h + out, None
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    return body
+
+
+def zamba2_forward(params, cfg, h, positions):
+    h = shard_activation(h)
+    h0 = h
+    body = _mamba_body(cfg)
+    for lo, hi in _segments(cfg):
+        h = _shared_attn_full(params["shared"], h, h0, cfg, positions)
+        seg = jax.tree.map(lambda x: x[lo:hi], params["mamba_layers"])
+        h, _ = jax.lax.scan(body, h, seg)
+    return h
+
+
+class HybridState(NamedTuple):
+    mamba: MambaCache   # stacked (L, ...)
+    attn: KVCache       # stacked (n_sites, ...)
+    pos: jax.Array
+
+
+def zamba2_init_state(cfg, batch, cache_len, dtype):
+    from .attention import cache_capacity
+    n_sites = len(_sites(cfg))
+    m = MambaCache.init(batch, cfg.d_model, expand=cfg.ssm_expand,
+                        headdim=cfg.ssm_headdim, ssm_state=cfg.ssm_state,
+                        dtype=dtype)
+    m = MambaCache(*jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), m))
+    cap = cache_capacity(cache_len, cfg.sliding_window)
+    a = KVCache.init(batch, cap, cfg.n_kv_heads, cfg.d_model // cfg.n_heads,
+                     dtype)
+    a = KVCache(*jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_sites,) + x.shape), a))
+    return HybridState(m, a, jnp.asarray(0, jnp.int32))
+
+
+def zamba2_decode_step(params, cfg, state: HybridState, h):
+    """h: (B, D) embedded token. Returns (h_out, new state)."""
+    h0 = h
+    pos = state.pos
+    mcaches, acaches = state.mamba, state.attn
+
+    def mstep(h, lp, cache):
+        out, new_cache = mamba2_decode(
+            lp, rmsnorm(h, lp["ln"], cfg.norm_eps), cache)
+        return h + out, new_cache
+
+    for si, (lo, hi) in enumerate(_segments(cfg)):
+        site_cache = jax.tree.map(lambda x: x[si], acaches)
+        h, new_site = _shared_attn_step(params["shared"], h, h0, cfg,
+                                        KVCache(*site_cache), pos)
+        acaches = KVCache(*jax.tree.map(
+            lambda full, new: full.at[si].set(new), tuple(acaches),
+            tuple(new_site)))
+        seg_p = jax.tree.map(lambda x: x[lo:hi], params["mamba_layers"])
+        seg_c = jax.tree.map(lambda x: x[lo:hi], mcaches)
+
+        def sbody(carry, xs):
+            lp, cache = xs
+            hh, nc = mstep(carry, lp, MambaCache(*cache))
+            return hh, tuple(nc)
+        h, new_seg = jax.lax.scan(sbody, h, (seg_p, tuple(seg_c)))
+        mcaches = MambaCache(*jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                full, new, lo, axis=0), tuple(mcaches), new_seg))
+    return h, HybridState(mcaches, acaches, pos + 1)

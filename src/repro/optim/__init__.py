@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm
+from .compression import compressed_grads, compressed_psum, quantize_int8

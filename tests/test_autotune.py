@@ -1,0 +1,87 @@
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import AutoSpec
+from repro.core.autotune import AutoTuner, Phase
+
+
+def feed_epochs(tuner, time_of):
+    """Drive epochs to completion with avg time = time_of(constraint, k)."""
+    guard = 0
+    while tuner.learning() and guard < 50:
+        guard += 1
+        e = tuner.epoch
+        k = e.target_k
+        for _ in range(k):
+            assert tuner.admit()
+        for _ in range(k):
+            tuner.on_task_complete(time_of(e.constraint, k))
+
+
+def fair_share_time(mb=290.0, bw=450.0, cap=8.0, knee=56, a=0.004, b=1e-5):
+    def t(c, k):
+        ramp = min(k * cap, bw)
+        over = max(0, k - knee)
+        agg = ramp / (1 + a * over + b * over * over)
+        return mb * k / agg
+    return t
+
+
+def test_unbounded_walk_matches_paper():
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    feed_epochs(tuner, fair_share_time())
+    assert [c for c, _ in tuner.history] == [2.0, 4.0, 8.0, 16.0]
+    assert sorted(tuner.registry) == [2.0, 4.0, 8.0]
+    assert tuner.choose(2000) == 8.0
+
+
+def test_bounded_walk_matches_paper():
+    tuner = AutoTuner("ck", AutoSpec(bounded=True, min=2, max=256, delta=2),
+                      450.0, 225)
+    feed_epochs(tuner, fair_share_time())
+    assert len(tuner.history) == 8
+    assert tuner.choose(2000) == 8.0
+
+
+def test_tie_goes_to_highest_constraint():
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    tuner.registry = {8.0: 10.0, 16.0: 10.0}
+    tuner.phase = Phase.DONE
+    # T(1, 8)=10 == T(1, 16)=10 -> highest wins (paper §4.2.3C)
+    assert tuner.choose(1) == 16.0
+
+
+def test_end_of_stream_closes_partial_epoch():
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    for _ in range(10):
+        assert tuner.admit()
+    for _ in range(10):
+        tuner.on_task_complete(5.0)
+    tuner.end_of_stream()
+    assert not tuner.learning()
+    assert tuner.registry  # partial epoch still registered
+
+
+@given(st.dictionaries(st.sampled_from([2.0, 4.0, 8.0, 16.0, 32.0]),
+                       st.floats(1.0, 1e4), min_size=1),
+       st.integers(1, 5000))
+def test_choose_is_argmin_of_objective(registry, n):
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    tuner.registry = dict(registry)
+    tuner.phase = Phase.DONE
+    c = tuner.choose(n)
+    best = min(tuner.objective_time(n, cc) for cc in registry)
+    assert math.isclose(tuner.objective_time(n, c), best, rel_tol=1e-9)
+    # tie rule: no strictly-higher constraint achieves the same objective
+    for cc in registry:
+        if cc > c:
+            assert tuner.objective_time(n, cc) > best + -1e-12
+
+
+@given(st.integers(1, 10000), st.sampled_from([2.0, 4.0, 8.0, 32.0]))
+def test_objective_ceil_groups(n, c):
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    tuner.registry = {c: 7.0}
+    k = tuner._k_for(c)
+    assert tuner.objective_time(n, c) == math.ceil(n / k) * 7.0

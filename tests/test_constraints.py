@@ -1,0 +1,39 @@
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import AutoSpec, StaticSpec, parse_storage_bw
+
+
+def test_parse_static():
+    assert parse_storage_bw(20) == StaticSpec(20.0)
+    assert parse_storage_bw("12.5") == StaticSpec(12.5)
+
+
+def test_parse_auto_unbounded():
+    spec = parse_storage_bw("auto")
+    assert isinstance(spec, AutoSpec) and not spec.bounded
+
+
+def test_parse_auto_bounded():
+    spec = parse_storage_bw("auto(2,256,2)")
+    assert spec == AutoSpec(bounded=True, min=2, max=256, delta=2)
+    assert parse_storage_bw("auto( 10 , 50 , 4 )").max == 50
+
+
+@pytest.mark.parametrize("bad", ["auto(5)", "auto(0,10,2)", "auto(10,5,2)",
+                                 "auto(2,256,1)", "nope", -3, 0])
+def test_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_storage_bw(bad)
+
+
+@given(st.floats(min_value=0.1, max_value=1e6, allow_nan=False))
+def test_parse_static_roundtrip(x):
+    assert parse_storage_bw(x).value == pytest.approx(x)
+
+
+@given(st.integers(1, 100), st.integers(0, 10), st.integers(2, 8))
+def test_parse_bounded_roundtrip(lo, span, delta):
+    hi = lo + span
+    spec = parse_storage_bw(f"auto({lo},{hi},{delta})")
+    assert (spec.min, spec.max, spec.delta) == (lo, hi, delta)

@@ -1,0 +1,40 @@
+import numpy as np
+
+from repro.core import Cluster, IORuntime, RealBackend
+from repro.data import PrefetchLoader, SyntheticCorpus
+
+
+def test_corpus_deterministic_and_restart_safe():
+    c1 = SyntheticCorpus(1000, 16, 4, seed=7)
+    c2 = SyntheticCorpus(1000, 16, 4, seed=7)
+    b1, b2 = c1.batch(5), c2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(c1.batch(5)["tokens"], c1.batch(6)["tokens"])
+    # targets are next-token shifted
+    full1 = c1.batch(3)
+    np.testing.assert_array_equal(full1["tokens"][:, 1:],
+                                  full1["targets"][:, :-1])
+    # structured mode: most transitions follow the affine map
+    c3 = SyntheticCorpus(1000, 64, 4, seed=2, structured=True, noise=0.1)
+    b = c3.batch(0)
+    pred = (b["tokens"] * 31 + 7) % 1000
+    frac = (pred == b["targets"]).mean()
+    assert frac > 0.7
+
+
+def test_host_sharding_partitions_batch():
+    full = SyntheticCorpus(1000, 8, 8, seed=1)
+    parts = [SyntheticCorpus(1000, 8, 8, seed=1, n_hosts=4, host_index=i)
+             for i in range(4)]
+    assert all(p.local_batch == 2 for p in parts)
+
+
+def test_prefetch_matches_direct():
+    corpus = SyntheticCorpus(500, 8, 2, seed=3)
+    loader = PrefetchLoader(corpus, depth=2)
+    with IORuntime(Cluster.make(n_workers=1, cpus=2, io_executors=4),
+                   backend=RealBackend()):
+        for step in range(5):
+            got = loader.get(step)
+            np.testing.assert_array_equal(got["tokens"],
+                                          corpus.batch(step)["tokens"])

@@ -1,0 +1,113 @@
+"""Distributed EXECUTION tests (not just lowering): run in subprocesses with
+XLA_FLAGS forcing 8 host devices, so the sharded program actually executes.
+
+1. tp_fsdp-sharded train step == single-device train step (numerics).
+2. Elastic restart: checkpoint written under a (4,2) mesh restores onto a
+   (2,4) mesh and training continues (DESIGN.md §7).
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+PROG_EQUIV = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.distributed import mesh_context
+from repro.distributed.sharding import STRATEGIES
+from repro.launch.specs import build_cell, model_shapes_and_axes, tree_shardings, with_shardings
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.configs.base import ShapeCell
+
+cfg = get_smoke_config("tinyllama-1.1b").replace(dtype=jnp.float32)
+model = Model(cfg)
+params, axes = model.init(jax.random.PRNGKey(0))
+opt = adamw_init(params)
+acfg = AdamWConfig()
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size),
+         "targets": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab_size)}
+
+def step(p, o, b):
+    loss, g = jax.value_and_grad(model.loss)(p, b)
+    np_, no, gn = adamw_update(g, p, o, acfg)
+    return loss, np_
+
+# single device
+loss1, p1 = jax.jit(step)(params, opt, batch)
+
+# 4x2 mesh, tp_fsdp rules, actually executed
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+with mesh_context(mesh, rules=STRATEGIES["tp_fsdp"]):
+    sh = tree_shardings(jax.eval_shape(lambda: params), axes, mesh)
+    p_sharded = jax.tree.map(jax.device_put, params, sh)
+    loss8, p8 = jax.jit(step)(p_sharded, opt, batch)
+
+assert abs(float(loss1) - float(loss8)) < 1e-4, (float(loss1), float(loss8))
+d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)))), p1, p8)
+md = max(jax.tree.leaves(d))
+assert md < 1e-3, md
+print("EQUIV_OK", float(loss1), float(loss8), md)
+"""
+
+PROG_ELASTIC = r"""
+import os, sys, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.distributed import mesh_context
+from repro.distributed.sharding import STRATEGIES
+from repro.launch.specs import tree_shardings
+from repro.models import Model
+
+ckdir = sys.argv[1]
+cfg = get_smoke_config("smollm-360m").replace(dtype=jnp.float32)
+model = Model(cfg)
+params, axes = model.init(jax.random.PRNGKey(0))
+
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+with mesh_context(mesh_a, rules=STRATEGIES["tp_fsdp"]):
+    sh_a = tree_shardings(jax.eval_shape(lambda: params), axes, mesh_a)
+    p_a = jax.tree.map(jax.device_put, params, sh_a)
+    mgr = CheckpointManager(ckdir, n_shards=4)
+    mgr.save(3, p_a, sync=True)
+
+# relaunch onto a DIFFERENT mesh shape: (2, 4)
+mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+with mesh_context(mesh_b, rules=STRATEGIES["tp_fsdp"]):
+    sh_b = tree_shardings(jax.eval_shape(lambda: params), axes, mesh_b)
+    p_b, step = mgr.restore(params, shardings=sh_b)
+    assert step == 3
+    # values survive the re-sharding
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)))), p_a, p_b)
+    assert max(jax.tree.leaves(d)) == 0.0
+    # and the restored params run a step under the new mesh
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size),
+             "targets": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, cfg.vocab_size)}
+    loss = jax.jit(model.loss)(p_b, batch)
+    assert bool(jnp.isfinite(loss))
+print("ELASTIC_OK", float(loss))
+"""
+
+
+def _run(prog, *args):
+    return subprocess.run(
+        [sys.executable, "-c", prog, *args], capture_output=True, text=True,
+        timeout=420, env={"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin",
+                          "HOME": "/root"})
+
+
+def test_sharded_train_step_matches_single_device():
+    r = _run(PROG_EQUIV)
+    assert "EQUIV_OK" in r.stdout, r.stdout + r.stderr[-2000:]
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path):
+    r = _run(PROG_ELASTIC, str(tmp_path / "ck"))
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr[-2000:]

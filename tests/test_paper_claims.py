@@ -1,0 +1,64 @@
+"""The paper's quantitative claims, asserted against the runtime on the
+calibrated storage model (small-but-faithful workloads for speed)."""
+import pytest
+
+from benchmarks.apps import run_hmmer, run_kmeans
+from repro.core import StorageDevice, aggregate_throughput, max_concurrent_tasks
+
+
+def test_unbounded_learning_walk():
+    st = run_hmmer("constrained", bw="auto", n=1200, dur=30)
+    t = st["tuners"]["checkpointFrag"]
+    assert [c for c, _ in t["history"]] == [2.0, 4.0, 8.0, 16.0]
+    assert sorted(t["registry"]) == [2.0, 4.0, 8.0]
+    assert t["modal_choice"] == 8.0
+    # Fig 12a: avg task time halves while the phase continues
+    times = [x for _, x in t["history"]]
+    assert times[1] <= times[0] / 2 and times[2] <= times[1] / 2
+    assert times[3] > times[2] / 2  # violation ends the phase
+
+
+def test_bounded_learning_walk():
+    st = run_hmmer("constrained", bw="auto(2,256,2)", n=1500, dur=30)
+    t = st["tuners"]["checkpointFrag"]
+    assert [c for c, _ in t["history"]] == [2.0, 4.0, 8.0, 16.0, 32.0, 64.0,
+                                            128.0, 256.0]
+    assert t["modal_choice"] == 8.0
+
+
+def test_nonconstrained_congestion_hurts():
+    base = run_hmmer("baseline", n=600, dur=30)["makespan"]
+    nonc = run_hmmer("io", n=600, dur=30, io_executors=500)["makespan"]
+    s8 = run_hmmer("constrained", bw=8, n=600, dur=30)["makespan"]
+    assert nonc > base          # Fig 10: I/O tasks alone make things WORSE
+    assert s8 < base            # constraints + overlap beat the baseline
+
+
+def test_static_sweep_u_shape():
+    times = {c: run_hmmer("constrained", bw=c, n=600, dur=30)["makespan"]
+             for c in (2, 8, 256)}
+    assert times[8] < times[2] and times[8] < times[256]
+    assert times[256] > 3 * times[8]  # "drastically harms" (paper §5.2.1)
+
+
+def test_kmeans_learning_task_counts():
+    """Paper §5.2.3: bounded auto uses 446 tasks for learning (= sum of
+    epoch sizes); unbounded uses 421 in our model (435 in the paper — their
+    phase ran one epoch longer; deviation documented in EXPERIMENTS.md)."""
+    st = run_kmeans("constrained", bw="auto(2,256,2)", iterations=1)
+    t = st["tuners"]["checkpointCenters"]
+    learned = sum(min(int(450 // c), 225) for c, _ in t["history"])
+    assert learned == 446
+    st = run_kmeans("constrained", bw="auto", iterations=1)
+    t = st["tuners"]["checkpointCenters"]
+    learned = sum(min(int(450 // c), 225) for c, _ in t["history"])
+    assert learned == 421
+
+
+def test_unbounded_start_matches_paper_arithmetic():
+    # start = floor(device_bw / io_executors): 225 -> 2, 112 -> 4, 56 -> 8
+    for execs, start in [(225, 2.0), (112, 4.0), (56, 8.0)]:
+        st = run_hmmer("constrained", bw="auto", n=400, dur=30,
+                       io_executors=execs)
+        hist = st["tuners"]["checkpointFrag"]["history"]
+        assert hist[0][0] == start, (execs, hist)

@@ -1,0 +1,83 @@
+"""RealBackend: threads, futures, retries, failure propagation, overlap."""
+import os
+import tempfile
+import time
+
+import pytest
+
+from repro.core import (Cluster, IORuntime, RealBackend, StorageDevice,
+                        WorkerNode, constraint, io, task, wait_on)
+
+
+def small_cluster():
+    dev = StorageDevice(name="fs", bandwidth=1000, per_stream_cap=250)
+    return Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                       storage=dev)])
+
+
+def test_values_flow_through_futures():
+    with IORuntime(small_cluster(), backend=RealBackend()) as rt:
+        @task(returns=1)
+        def double(x):
+            return x * 2
+
+        @task(returns=1)
+        def add(a, b):
+            return a + b
+        out = add(double(3), double(4))
+        assert rt.wait_on(out) == 14
+
+
+def test_multi_returns():
+    with IORuntime(small_cluster(), backend=RealBackend()) as rt:
+        @task(returns=2)
+        def divmod_(a, b):
+            return a // b, a % b
+        q, r = divmod_(17, 5)
+        assert rt.wait_on(q, r) == [3, 2]
+
+
+def test_io_task_writes_and_overlaps():
+    tmp = tempfile.mkdtemp()
+    with IORuntime(small_cluster(), backend=RealBackend()) as rt:
+        @task(returns=1)
+        def compute(i):
+            time.sleep(0.05)
+            return bytes(50_000)
+
+        @io
+        @task()
+        def save(data, i):
+            with open(os.path.join(tmp, f"{i}.bin"), "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+        for i in range(6):
+            save(compute(i), i)
+        rt.barrier(final=True)
+    assert len(os.listdir(tmp)) == 6
+
+
+def test_retry_then_success():
+    calls = {"n": 0}
+    with IORuntime(small_cluster(), backend=RealBackend()) as rt:
+        @constraint(maxRetries=3)
+        @io
+        @task()
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise IOError("transient")
+        flaky()
+        rt.barrier(final=True)
+    assert calls["n"] == 3
+
+
+def test_failure_raises_at_barrier():
+    with pytest.raises(RuntimeError, match="failed"):
+        with IORuntime(small_cluster(), backend=RealBackend()) as rt:
+            @task()
+            def boom():
+                raise ValueError("nope")
+            boom()
+            rt.barrier(final=True)

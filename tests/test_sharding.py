@@ -1,0 +1,56 @@
+"""Divisibility-aware sharding rules (hypothesis properties)."""
+import os
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import LOGICAL_RULES, spec_for
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # AbstractMesh: pure shape logic, no devices needed — lets these
+    # properties exercise the production 16x16 shape on a 1-CPU box
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_divisible_dims_shard(mesh):
+    n = mesh.shape["data"]
+    spec = spec_for((4 * n, 128), ("embed", "mlp"), mesh, LOGICAL_RULES)
+    assert spec[0] == "data"
+
+
+def test_indivisible_dims_replicate(mesh):
+    n = mesh.shape["data"]
+    spec = spec_for((4 * n + 1, 7), ("embed", "mlp"), mesh, LOGICAL_RULES)
+    assert spec == P() or all(s is None for s in spec)
+
+
+def test_axis_never_reused(mesh):
+    spec = spec_for((16, 16), ("embed", "embed"), mesh, LOGICAL_RULES)
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used)) <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from([None, "embed", "mlp", "heads", "vocab", "batch", "layers"]),
+    st.integers(1, 64)), min_size=0, max_size=4))
+def test_spec_always_valid(mesh, dims):
+    names = tuple(n for n, _ in dims)
+    shape = tuple(s for _, s in dims)
+    spec = spec_for(shape, names, mesh, LOGICAL_RULES)
+    # a valid spec: no axis reuse, and every sharded dim divisible
+    used = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in parts:
+            assert a not in used
+            used.append(a)
+            size *= mesh.shape[a]
+        assert dim % size == 0

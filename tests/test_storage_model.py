@@ -1,0 +1,47 @@
+from hypothesis import given, strategies as st
+
+from repro.core import (StorageDevice, aggregate_throughput,
+                        max_concurrent_tasks, per_task_rate)
+
+
+def dev():
+    return StorageDevice(name="d")
+
+
+def test_paper_calibration():
+    d = dev()
+    # DESIGN.md §4: the MareNostrum-4 numbers pin these down
+    assert max_concurrent_tasks(d.bandwidth, 2) == 225
+    assert max_concurrent_tasks(d.bandwidth, 8) == 56
+    assert max_concurrent_tasks(d.bandwidth, 256) == 1
+    assert aggregate_throughput(d, 56) == 448.0  # peak at the knee
+
+
+@given(st.integers(1, 1000))
+def test_aggregate_never_exceeds_device(k):
+    assert aggregate_throughput(dev(), k) <= dev().bandwidth + 1e-9
+
+
+@given(st.integers(1, 1000))
+def test_per_task_rate_capped_by_stream(k):
+    assert per_task_rate(dev(), k) <= dev().per_stream_cap + 1e-9
+
+
+@given(st.integers(1, 56))
+def test_linear_ramp_below_knee(k):
+    d = dev()
+    assert aggregate_throughput(d, k) == k * d.per_stream_cap
+
+
+@given(st.integers(57, 2000))
+def test_congestion_decreasing_past_knee(k):
+    d = dev()
+    assert aggregate_throughput(d, k + 1) < aggregate_throughput(d, k)
+
+
+def test_allocation_accounting():
+    d = dev()
+    d.allocate(400)
+    assert not d.can_allocate(100)
+    d.release(400)
+    assert d.can_allocate(450)
