@@ -1,55 +1,37 @@
-"""The I/O-aware scheduler (paper §4.2).
+"""Frozen copy of the seed scheduler + simulator (pre-optimisation).
 
-Compute tasks are placed by computing-unit availability (the compute
-execution platform). I/O tasks are placed by *I/O executor* availability and
-*storage-bandwidth* budget (the I/O execution platform) — their computing
-requirement is zero, so they overlap with compute tasks (paper §4.2.1).
-
-Auto-constrained tasks are routed through a per-signature :class:`AutoTuner`.
-While a tuner is learning, its tasks run only on a dedicated
-*active-learning node* and no other I/O tasks are co-scheduled there
-(paper §4.2.3B). Once learning finishes the node is released and the
-objective function picks the constraint, re-evaluated on every arrival.
-
-Hot-path design (100k-task workloads): ready tasks are kept in per
-*placement-class* FIFO deques — one class per (compute-units), (static-bw)
-or (auto signature) — because two ready tasks of the same class have
-identical placement requirements: if the head of a class cannot be placed,
-no other member can either, so a pass attempts at most one task per class
-instead of rescanning the whole ready list. A heap over class heads keeps
-the global attempt order identical to the seed's submission-order scan, and
-a dirty flag skips passes entirely unless a resource was freed, a tuner
-epoch advanced, or a new task became ready.
+This is the golden reference for ``benchmarks/sched_scale.py`` and
+``tests/test_sched_scale.py``: the rewritten O(log n) hot path in
+``repro.core.scheduler`` / ``repro.core.backends`` must produce bit-identical
+``launch_log`` and ``stats()`` on the same workload. Keep this file verbatim —
+it intentionally preserves the original O(ready^2) ``schedule_pass`` and the
+O(running) ``_next_event_time`` scan so the speedup can be measured against
+the real seed behaviour.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from collections import deque
-from typing import Callable, Iterable, Optional
+import time
+from typing import Callable, Optional
 
-from .autotune import AutoTuner
-from .constraints import AutoSpec, StaticSpec, is_auto
-from .resources import Cluster, StorageDevice, WorkerNode
-from .task import Future, TaskInstance, TaskState, TaskType
+from repro.core.autotune import AutoTuner
+from repro.core.backends import SimBackend
+from repro.core.constraints import AutoSpec, StaticSpec, is_auto
+from repro.core.resources import Cluster, WorkerNode
+from repro.core.scheduler import SchedulerError
+from repro.core.storage_model import per_task_rate
+from repro.core.task import Future, TaskInstance, TaskState, TaskType
+
+_EPS = 1e-9
 
 
-class SchedulerError(RuntimeError):
-    pass
+class SeedScheduler:
+    """Verbatim seed ``Scheduler``: O(ready) rescan per placement round."""
 
-
-class Scheduler:
     def __init__(self, cluster: Cluster,
                  launch: Callable[[TaskInstance, WorkerNode], None]):
         self.cluster = cluster
         self._launch = launch
-        # per placement-class FIFO deques of ready tasks (see module docstring)
-        self._ready_q: dict[tuple, deque[TaskInstance]] = {}
-        self._ready_count = 0
-        self._sig_ready: dict[str, int] = {}   # signature -> #ready (O(1))
-        self._ready_seq = itertools.count()    # global readiness order
-        self._dirty = True                     # wake-up flag: anything changed
-        #                                        since the last zero-progress pass?
+        self.ready: list[TaskInstance] = []
         self.running: set[int] = set()
         self.tuners: dict[str, AutoTuner] = {}
         self.learning_nodes: dict[str, WorkerNode] = {}
@@ -57,16 +39,14 @@ class Scheduler:
         self.launch_log: list[tuple[float, str, str]] = []  # (tid, sig, worker)
 
     # ------------------------------------------------------------------ utils
-    def tuner_for(self, task: TaskInstance,
-                  node: Optional[WorkerNode] = None) -> AutoTuner:
+    def tuner_for(self, task: TaskInstance) -> AutoTuner:
         sig = task.defn.signature
         if sig not in self.tuners:
             spec = task.storage_bw
             assert isinstance(spec, AutoSpec)
-            # the device model the tuner reasons about: the device of the
-            # active-learning node its epochs actually run on (falls back to
-            # the first worker when called before a node is acquired).
-            w = node if node is not None else self.cluster.workers[0]
+            # the device model the tuner reasons about: the (first) device its
+            # tasks will run on. Homogeneous devices assumed per signature.
+            w = self.cluster.workers[0]
             self.tuners[sig] = AutoTuner(
                 sig, spec, device_bw=w.storage.bandwidth,
                 io_executors=w.io_executors)
@@ -87,103 +67,34 @@ class Scheduler:
         node = self.learning_nodes.pop(sig, None)
         if node is not None:
             node.learning_owner = None
-            self._dirty = True
 
     def n_ready_of(self, sig: str) -> int:
-        return self._sig_ready.get(sig, 0)
+        return sum(1 for t in self.ready if t.defn.signature == sig)
 
     @property
     def n_ready(self) -> int:
-        return self._ready_count
-
-    @property
-    def ready(self) -> list[TaskInstance]:
-        """Materialised ready list in readiness order (debug/reporting only —
-        the hot path never builds this)."""
-        tasks = [t for q in self._ready_q.values() for t in q]
-        tasks.sort(key=lambda t: t._ready_seq)
-        return tasks
-
-    @staticmethod
-    def _class_key(task: TaskInstance) -> tuple:
-        """Placement class: tasks with the same key have identical placement
-        requirements at any scheduler state."""
-        d = task.defn
-        if d.task_type == TaskType.COMPUTE:
-            return ("C", d.computing_units)
-        spec = task.storage_bw
-        if is_auto(spec):
-            return ("A", d.signature)
-        bw = spec.value if isinstance(spec, StaticSpec) else 0.0
-        return ("S", bw)
+        return len(self.ready)
 
     # -------------------------------------------------------------- submission
     def make_ready(self, task: TaskInstance) -> None:
-        task._ready_seq = next(self._ready_seq)
-        key = self._class_key(task)
-        q = self._ready_q.get(key)
-        if q is None:
-            q = self._ready_q[key] = deque()
-        q.append(task)
-        self._ready_count += 1
-        sig = task.defn.signature
-        self._sig_ready[sig] = self._sig_ready.get(sig, 0) + 1
-        self._dirty = True
+        self.ready.append(task)
 
-    def make_ready_many(self, tasks: Iterable[TaskInstance]) -> None:
-        """Batched completion fan-out: newly-ready children arrive together
-        (in submission order) so the pass that follows sees them all."""
+    def make_ready_many(self, tasks) -> None:
         for t in tasks:
-            self.make_ready(t)
+            self.ready.append(t)
 
     # -------------------------------------------------------------- scheduling
     def schedule_pass(self) -> int:
-        """Try to place every ready task; returns number launched.
-
-        Event-driven: returns immediately unless something changed since the
-        last zero-progress pass (resource freed, tuner epoch advanced, new
-        ready task). Within a pass, class heads are attempted in global
-        readiness order; a failed head blocks its whole class for the rest of
-        the round (identical requirements => identical outcome), and rounds
-        repeat until one launches nothing — matching the seed's
-        ``while progress`` full-rescan semantics at O(log n) per attempt.
-        """
-        if not self._dirty or self._ready_count == 0:
-            return 0
+        """Try to place every ready task; returns number launched."""
         launched = 0
-        while True:
-            n = self._round()
-            launched += n
-            if n == 0:
-                break
-        self._dirty = False
-        return launched
-
-    def _round(self) -> int:
-        heads = [(q[0]._ready_seq, key)
-                 for key, q in self._ready_q.items() if q]
-        heapq.heapify(heads)
-        launched = 0
-        while heads:
-            _, key = heapq.heappop(heads)
-            q = self._ready_q[key]
-            task = q[0]
-            if self._try_place(task):
-                q.popleft()
-                self._ready_count -= 1
-                sig = task.defn.signature
-                self._sig_ready[sig] -= 1
-                if not self._sig_ready[sig]:
-                    del self._sig_ready[sig]
-                launched += 1
-                if q:
-                    heapq.heappush(heads, (q[0]._ready_seq, key))
-                else:
-                    # drop drained classes so rounds stay O(live classes)
-                    # (per-call storage_bw overrides can mint many keys)
-                    del self._ready_q[key]
-            # else: class blocked until the next round — nothing that happens
-            # later in this round can make it placeable (resources only shrink)
+        progress = True
+        while progress:
+            progress = False
+            for task in list(self.ready):
+                if self._try_place(task):
+                    self.ready.remove(task)
+                    launched += 1
+                    progress = True
         return launched
 
     def _try_place(self, task: TaskInstance) -> bool:
@@ -224,15 +135,12 @@ class Scheduler:
         return False
 
     def _place_auto_io(self, task: TaskInstance) -> bool:
+        tuner = self.tuner_for(task)
         sig = task.defn.signature
-        tuner = self.tuners.get(sig)
-        if tuner is None or tuner.learning():
+        if tuner.learning():
             node = self._acquire_learning_node(sig)
             if node is None:
                 return False
-            if tuner is None:
-                # the tuner models the device it actually learns on
-                tuner = self.tuner_for(task, node)
             c = tuner.current_constraint()
             if node.free_io_executors <= 0 or not node.storage.can_allocate(c):
                 return False
@@ -245,7 +153,7 @@ class Scheduler:
             return True
         # learning done: objective fn, re-evaluated for the current backlog
         n = self.n_ready_of(sig)
-        c = tuner.peek_choice(max(1, n))
+        c = tuner.choose(max(1, n))
         for w in self._io_candidates(task):
             if w.learning_owner is not None:
                 continue
@@ -253,7 +161,6 @@ class Scheduler:
                 continue
             w.free_io_executors -= 1
             w.storage.allocate(c)
-            tuner.record_choice(c)
             self._start(task, w, bw=c)
             return True
         return False
@@ -295,7 +202,6 @@ class Scheduler:
             if not tuner.learning():
                 self._release_learning_node(task.defn.signature)
         self.completed.append(task)
-        self._dirty = True  # a resource was freed (and maybe an epoch advanced)
 
     def end_of_stream(self) -> None:
         """Signal that no more tasks will be submitted (final barrier):
@@ -303,20 +209,131 @@ class Scheduler:
         for sig, tuner in self.tuners.items():
             if tuner.learning():
                 tuner.end_of_stream()
-                self._dirty = True
                 if not tuner.learning():
                     self._release_learning_node(sig)
 
     # ---------------------------------------------------------------- sanity
     def assert_not_stuck(self) -> None:
-        if self._ready_count and not self.running:
+        if self.ready and not self.running:
             # one legitimate transient: an auto task waiting for a learning
             # node held by a tuner whose epoch is waiting for more arrivals.
             self.end_of_stream()
-            self._dirty = True
-            if self.schedule_pass() == 0 and self._ready_count \
-                    and not self.running:
+            if self.schedule_pass() == 0 and self.ready and not self.running:
                 names = [t.defn.name for t in self.ready[:5]]
                 raise SchedulerError(
-                    f"scheduler stuck: {self._ready_count} ready tasks "
+                    f"scheduler stuck: {len(self.ready)} ready tasks "
                     f"(e.g. {names}) but nothing running/placeable")
+
+
+class SeedSimBackend(SimBackend):
+    """Verbatim seed ``SimBackend``: linear scans per event.
+
+    Subclasses the production SimBackend only so ``IORuntime.stats`` keeps
+    emitting the sim fields; every method is overridden with the seed body.
+    ``deadline`` (wall-clock seconds) optionally aborts a too-slow run so the
+    scale benchmark can bound the quadratic baseline.
+    """
+
+    def __init__(self, deadline: float | None = None):
+        self.clock = 0.0
+        self._compute: dict[int, tuple[TaskInstance, float]] = {}
+        self._io: dict[int, list] = {}  # tid -> [task, remaining_mb, min_end]
+        self.io_busy_time = 0.0
+        self.compute_busy_time = 0.0
+        self.overlap_time = 0.0
+        self.total_io_mb = 0.0
+        self.peak_io_mbs = 0.0
+        self._deadline = deadline
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return self.clock
+
+    def launch(self, task: TaskInstance, worker) -> None:
+        task.start_time = self.clock
+        if task.defn.task_type == TaskType.COMPUTE:
+            self._compute[task.tid] = (task, self.clock + max(task.sim.duration, _EPS))
+        else:
+            rem = max(task.sim.io_bytes, 0.0)
+            min_end = self.clock + max(task.sim.duration, _EPS)
+            self._io[task.tid] = [task, rem, min_end]
+
+    def _next_event_time(self) -> float:
+        t = float("inf")
+        for _, end in self._compute.values():
+            t = min(t, end)
+        for task, rem, min_end in self._io.values():
+            dev = task.worker.storage
+            rate = per_task_rate(dev, dev.active_io)
+            eta = self.clock + rem / rate if rate > 0 else float("inf")
+            t = min(t, max(eta, min_end))
+        return t
+
+    def _advance_to(self, t: float) -> None:
+        dt = t - self.clock
+        if dt <= 0:
+            self.clock = t
+            return
+        io_active = bool(self._io)
+        comp_active = bool(self._compute)
+        if io_active:
+            self.io_busy_time += dt
+        if comp_active:
+            self.compute_busy_time += dt
+        if io_active and comp_active:
+            self.overlap_time += dt
+        interval_mb = 0.0
+        for rec in self._io.values():
+            task, rem, _ = rec
+            dev = task.worker.storage
+            rate = per_task_rate(dev, dev.active_io)
+            moved = min(rem, rate * dt)
+            rec[1] = rem - moved
+            dev.bytes_written += moved
+            self.total_io_mb += moved
+            interval_mb += moved
+        if dt > 1e-6 and interval_mb > 0:
+            self.peak_io_mbs = max(self.peak_io_mbs, interval_mb / dt)
+        self.clock = t
+
+    def _pop_due(self) -> list[TaskInstance]:
+        due = []
+        for tid in list(self._compute):
+            task, end = self._compute[tid]
+            if end <= self.clock + _EPS:
+                del self._compute[tid]
+                due.append(task)
+        for tid in list(self._io):
+            task, rem, min_end = self._io[tid]
+            if rem <= 1e-6 and min_end <= self.clock + _EPS:
+                del self._io[tid]
+                due.append(task)
+        return due
+
+    def drain(self, predicate: Callable[[], bool]) -> None:
+        rt = self.runtime
+        while True:
+            if self._deadline is not None and \
+                    time.monotonic() - self._t0 > self._deadline:
+                raise TimeoutError("seed simulation exceeded deadline")
+            rt.scheduler.schedule_pass()
+            if predicate():
+                return
+            if not self._compute and not self._io:
+                if rt.scheduler.ready:
+                    rt.scheduler.assert_not_stuck()
+                    continue
+                if predicate():
+                    return
+                raise SchedulerError(
+                    f"simulation drained but predicate unmet "
+                    f"(unfinished={rt.graph.unfinished})")
+            t = self._next_event_time()
+            if t == float("inf"):
+                raise SchedulerError("no next event with tasks running")
+            self._advance_to(t)
+            for task in self._pop_due():
+                task.end_time = self.clock
+                for f in task.futures:
+                    f.set_value(None)
+                rt._handle_completion(task)

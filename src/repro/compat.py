@@ -1,0 +1,48 @@
+"""Version compatibility shims for jax.
+
+The repo targets the modern ``jax.shard_map`` API; on jax <= 0.4.x that
+entry point lives in ``jax.experimental.shard_map`` (keyword ``check_rep``
+instead of ``check_vma``). Import :func:`shard_map` from here instead of
+from jax directly.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.5
+    shard_map = jax.shard_map
+except AttributeError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+# the no-check kwarg rename (check_rep -> check_vma) happened independently
+# of shard_map's promotion to the jax namespace: detect by signature
+try:
+    _VMA_KW = ("check_vma" if "check_vma"
+               in inspect.signature(shard_map).parameters else "check_rep")
+except (TypeError, ValueError):  # pragma: no cover - exotic wrapper
+    _VMA_KW = "check_rep"
+
+
+def shard_map_no_check(f, mesh, in_specs, out_specs):
+    """shard_map with replication/VMA checking disabled, across jax versions
+    (the keyword was renamed check_rep -> check_vma)."""
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **{_VMA_KW: False})
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across jax versions: 0.4.x returns a
+    one-element list of dicts, newer jax returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def tpu_compiler_params():
+    """``pallas.tpu.CompilerParams`` class across jax versions (it was named
+    ``TPUCompilerParams`` until jax 0.5.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

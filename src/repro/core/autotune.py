@@ -178,8 +178,12 @@ class AutoTuner:
             total += t  # remainder estimated as one extra execution group
         return total
 
-    def choose(self, num_tasks: int) -> float:
-        """Constraint minimising T(num_tasks, c); ties -> highest c."""
+    def peek_choice(self, num_tasks: int) -> float:
+        """Constraint minimising T(num_tasks, c); ties -> highest c.
+
+        Pure: safe to call on every placement attempt. Bookkeeping happens in
+        :meth:`record_choice` only when the placement is actually granted, so
+        ``choice_counts`` reflects launched tasks rather than retries."""
         if not self.registry:
             return self.epoch.constraint
         best_c, best_t = None, None
@@ -188,9 +192,17 @@ class AutoTuner:
             if best_t is None or t < best_t - 1e-12 or \
                     (abs(t - best_t) <= 1e-12 and c > best_c):
                 best_c, best_t = c, t
-        self._last_choice = best_c
-        self._choice_counts[best_c] = self._choice_counts.get(best_c, 0) + 1
         return best_c
+
+    def record_choice(self, c: float) -> None:
+        self._last_choice = c
+        self._choice_counts[c] = self._choice_counts.get(c, 0) + 1
+
+    def choose(self, num_tasks: int) -> float:
+        """peek + record in one step (the paper's re-evaluated objective)."""
+        c = self.peek_choice(num_tasks)
+        self.record_choice(c)
+        return c
 
     def summary(self) -> dict:
         return {

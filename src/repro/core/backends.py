@@ -14,6 +14,8 @@ the end-to-end training driver for async checkpointing.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -52,6 +54,29 @@ class Backend:
 # Simulator
 # --------------------------------------------------------------------------
 class SimBackend(Backend):
+    """Discrete-event simulator with an O(log n) event queue.
+
+    Events live in a single lazy-deletion ``heapq``: each running task has at
+    most one *current* entry (a per-tid version counter supersedes older
+    ones). An entry's time is a lower-bound estimate of the task's true
+    finish time — exact while the task's device keeps its I/O population, and
+    an under-estimate after more streams join (rates only drop, so the true
+    time moves later). When a stream *leaves* a device the per-task rate
+    rises and old estimates would be late, so entries for that device are
+    eagerly re-pushed — devices expose monotonically increasing epochs
+    (resources.py): ``rate_epoch`` for any population change and
+    ``release_epoch`` for rate-RAISING changes only; the refresh keys on the
+    latter, because lower-bound estimates survive allocations unharmed.
+    ``_next_event_time`` then pops candidates, recomputes
+    their exact finish time at the current clock (the same arithmetic the
+    per-event linear scan used, so results are bit-identical), and returns
+    the minimum.
+    """
+
+    #: estimates within this window of the best candidate are recomputed
+    #: exactly (covers float drift between push-time and pop-time arithmetic)
+    _GUARD = 1e-9
+
     def __init__(self):
         self.clock = 0.0
         self._compute: dict[int, tuple[TaskInstance, float]] = {}  # tid -> (task, end)
@@ -61,30 +86,90 @@ class SimBackend(Backend):
         self.overlap_time = 0.0         # time with BOTH compute and I/O active
         self.total_io_mb = 0.0
         self.peak_io_mbs = 0.0          # max sustained aggregate I/O rate
+        # --- event queue state ---
+        self._heap: list[tuple[float, int, int, int]] = []  # (est, seq, tid, ver)
+        self._entry_ver: dict[int, int] = {}                # tid -> live version
+        self._push_seq = itertools.count()
+        self._launch_seq = itertools.count()                # seed-order pop ties
+        self._dev_tasks: dict[int, tuple] = {}   # id(dev) -> (dev, set[tid])
+        self._dev_epoch_seen: dict[int, int] = {}  # id(dev) -> release_epoch
 
     def now(self) -> float:
         return self.clock
 
+    # ---------------------------------------------------------- event queue
+    def _push_entry(self, tid: int, est: float) -> None:
+        ver = self._entry_ver.get(tid, 0) + 1
+        self._entry_ver[tid] = ver
+        heapq.heappush(self._heap, (est, next(self._push_seq), tid, ver))
+
+    def _true_finish(self, rec: list) -> float:
+        task, rem, min_end = rec
+        dev = task.worker.storage
+        rate = per_task_rate(dev, dev.active_io)
+        eta = self.clock + rem / rate if rate > 0 else float("inf")
+        return max(eta, min_end)
+
+    def _refresh_stale_devices(self) -> None:
+        """Re-push estimates for every task on a device whose per-task rate
+        *rose* since the last check (lazy deletion leaves the superseded
+        entries to be skipped on pop).
+
+        Only releases raise rates — per-task rate is non-increasing in the
+        stream count — and only a rate rise can turn an existing lower-bound
+        estimate stale-late, so allocations (launch bursts) cost nothing
+        here: their entries are merely early and get tightened lazily."""
+        for dev_id, (dev, tids) in self._dev_tasks.items():
+            if not tids:
+                continue
+            if self._dev_epoch_seen.get(dev_id) == dev.release_epoch:
+                continue
+            self._dev_epoch_seen[dev_id] = dev.release_epoch
+            for tid in tids:
+                self._push_entry(tid, self._true_finish(self._io[tid]))
+
     def launch(self, task: TaskInstance, worker) -> None:
         task.start_time = self.clock
+        task._sim_seq = next(self._launch_seq)
         if task.defn.task_type == TaskType.COMPUTE:
-            self._compute[task.tid] = (task, self.clock + max(task.sim.duration, _EPS))
+            end = self.clock + max(task.sim.duration, _EPS)
+            self._compute[task.tid] = (task, end)
+            self._push_entry(task.tid, end)
         else:
             rem = max(task.sim.io_bytes, 0.0)
             min_end = self.clock + max(task.sim.duration, _EPS)
-            self._io[task.tid] = [task, rem, min_end]
+            rec = [task, rem, min_end]
+            self._io[task.tid] = rec
+            dev = worker.storage
+            entry = self._dev_tasks.get(id(dev))
+            if entry is None:
+                entry = self._dev_tasks[id(dev)] = (dev, set())
+            entry[1].add(task.tid)
+            self._push_entry(task.tid, self._true_finish(rec))
 
     def _next_event_time(self) -> float:
-        t = float("inf")
-        for _, end in self._compute.values():
-            t = min(t, end)
-        # group io tasks per device for rate computation
-        for task, rem, min_end in self._io.values():
-            dev = task.worker.storage
-            rate = per_task_rate(dev, dev.active_io)
-            eta = self.clock + rem / rate if rate > 0 else float("inf")
-            t = min(t, max(eta, min_end))
-        return t
+        heap, ver = self._heap, self._entry_ver
+        best = float("inf")
+        repush = []
+        while heap:
+            est, _, tid, v = heap[0]
+            if est > best + self._GUARD:
+                break
+            heapq.heappop(heap)
+            if ver.get(tid) != v:
+                continue  # superseded or finished: lazy deletion
+            if tid in self._compute:
+                true = self._compute[tid][1]
+            elif tid in self._io:
+                true = self._true_finish(self._io[tid])
+            else:
+                continue
+            if true < best:
+                best = true
+            repush.append((true, tid))
+        for true, tid in repush:
+            self._push_entry(tid, true)
+        return best
 
     def _advance_to(self, t: float) -> None:
         dt = t - self.clock
@@ -109,33 +194,65 @@ class SimBackend(Backend):
             dev.bytes_written += moved
             self.total_io_mb += moved
             interval_mb += moved
+            if rec[1] <= 1e-6 < rem:
+                # transfer finished off its own event (float ties): from here
+                # the task's exact finish is its min_end — re-key its entry
+                self._push_entry(task.tid, max(t, rec[2]))
         if dt > 1e-6 and interval_mb > 0:
             self.peak_io_mbs = max(self.peak_io_mbs, interval_mb / dt)
         self.clock = t
 
+    def _finish_io(self, tid: int) -> TaskInstance:
+        task, _, _ = self._io.pop(tid)
+        self._entry_ver.pop(tid, None)
+        self._dev_tasks[id(task.worker.storage)][1].discard(tid)
+        return task
+
     def _pop_due(self) -> list[TaskInstance]:
-        due = []
-        for tid in list(self._compute):
-            task, end = self._compute[tid]
-            if end <= self.clock + _EPS:
-                del self._compute[tid]
-                due.append(task)
-        for tid in list(self._io):
-            task, rem, min_end = self._io[tid]
-            if rem <= 1e-6 and min_end <= self.clock + _EPS:
-                del self._io[tid]
-                due.append(task)
-        return due
+        heap, ver = self._heap, self._entry_ver
+        due_c: list[TaskInstance] = []
+        due_io: list[TaskInstance] = []
+        repush: list[tuple[int, float]] = []
+        horizon = self.clock + _EPS
+        while heap and heap[0][0] <= horizon:
+            _, _, tid, v = heapq.heappop(heap)
+            if ver.get(tid) != v:
+                continue
+            if tid in self._compute:
+                task, end = self._compute[tid]
+                if end <= horizon:
+                    del self._compute[tid]
+                    del ver[tid]
+                    due_c.append(task)
+                else:  # defensive: estimate undershot the fixed end
+                    repush.append((tid, end))
+            elif tid in self._io:
+                rec = self._io[tid]
+                if rec[1] <= 1e-6 and rec[2] <= horizon:
+                    due_io.append(self._finish_io(tid))
+                else:  # estimate was early (device gained streams): tighten
+                    repush.append((tid, self._true_finish(rec)))
+        # re-push AFTER draining the horizon: a tightened estimate can land
+        # back inside it (fast devices: rem in MB vs horizon in seconds) and
+        # re-pushing inside the loop would pop it again forever
+        for tid, est in repush:
+            self._push_entry(tid, est)
+        # the seed popped compute tasks then I/O tasks, each in launch order
+        due_c.sort(key=lambda t: t._sim_seq)
+        due_io.sort(key=lambda t: t._sim_seq)
+        return due_c + due_io
 
     def drain(self, predicate: Callable[[], bool]) -> None:
         rt = self.runtime
         while True:
             rt.scheduler.schedule_pass()
+            # no refresh needed here: launches only allocate (rates drop),
+            # which leaves existing estimates as valid lower bounds
             if predicate():
                 return
             if not self._compute and not self._io:
                 # nothing running: either stalled learning epochs or done
-                if rt.scheduler.ready:
+                if rt.scheduler.n_ready:
                     rt.scheduler.assert_not_stuck()
                     continue
                 if predicate():
@@ -152,6 +269,7 @@ class SimBackend(Backend):
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
+            self._refresh_stale_devices()  # releases raised device rates
 
 
 # --------------------------------------------------------------------------
@@ -247,7 +365,7 @@ class RealBackend(Backend):
                         f"{t.retries} attempt(s)") from t.error
                 if predicate():
                     return
-                if not rt.scheduler.running and rt.scheduler.ready:
+                if not rt.scheduler.running and rt.scheduler.n_ready:
                     rt.scheduler.assert_not_stuck()
                     continue
                 self._cv.wait(timeout=self._poll)

@@ -45,55 +45,129 @@ class TaskGraph:
         self._missing_deps: dict[int, int] = {}  # tid -> #unfinished deps
 
     def add(self, task: TaskInstance) -> bool:
-        """Register a task; returns True if it is immediately ready."""
+        """Register a task; returns True if it is immediately ready.
+
+        Edges are tagged by kind: *data* edges (futures, read-after-write,
+        write-after-write on INOUT) require the producer to SUCCEED; *anti*
+        edges (write-after-read serialisation) only require the predecessor
+        to be out of the way, so a FAILED/cancelled predecessor satisfies
+        them instead of propagating the failure.
+        """
         names = _param_names(task.defn)
         bound = list(zip(names, task.args)) + list(task.kwargs.items())
 
-        deps: set[TaskInstance] = set()
+        deps: dict[TaskInstance, bool] = {}  # dep -> is_data (data wins)
         for pname, arg in bound:
             if not isinstance(arg, DataHandle):
                 for fut in iter_futures(arg):
-                    if fut.task.state not in (TaskState.DONE,):
-                        deps.add(fut.task)
+                    deps[fut.task] = True
             if isinstance(arg, DataHandle):
                 direction = task.defn.param_dirs.get(pname, Direction.IN)
                 if direction == Direction.IN:
-                    if arg.last_writer is not None and \
-                            arg.last_writer.state != TaskState.DONE:
-                        deps.add(arg.last_writer)
+                    if arg.last_writer is not None:
+                        deps[arg.last_writer] = True
                     arg.readers_since_write.append(task)
                 else:  # INOUT / OUT: write-after-write + write-after-read
-                    if direction == Direction.INOUT and arg.last_writer is not None \
-                            and arg.last_writer.state != TaskState.DONE:
-                        deps.add(arg.last_writer)
+                    if direction == Direction.INOUT and \
+                            arg.last_writer is not None:
+                        deps[arg.last_writer] = True
                     for r in arg.readers_since_write:
-                        if r.state != TaskState.DONE and r is not task:
-                            deps.add(r)
+                        if r is not task:
+                            deps.setdefault(r, False)  # anti edge
                     arg.version += 1
                     arg.last_writer = task
                     arg.readers_since_write = []
 
-        task.deps = {d.tid for d in deps}
-        for d in deps:
-            d.children.append(task)
+        task.deps = set()
+        task.anti_deps = set()
+        dead = None
+        for d, is_data in deps.items():
+            if d.state == TaskState.DONE:
+                continue  # satisfied
+            if d.state == TaskState.FAILED:
+                if is_data:
+                    dead = dead or d  # producer already crashed: doomed
+                continue  # a failed anti-predecessor is out of the way
+            task.deps.add(d.tid)
+            if not is_data:
+                task.anti_deps.add(d.tid)
+            d.children.append(task.tid)
         self.tasks[task.tid] = task
-        self._missing_deps[task.tid] = len(task.deps)
+        if dead is not None:
+            task.state = TaskState.FAILED
+            task.error = RuntimeError(
+                f"cancelled: ancestor {dead.defn.name}#{dead.tid} failed")
+            return False
         self.unfinished += 1
         if not task.deps:
             task.state = TaskState.READY
             return True
+        self._missing_deps[task.tid] = len(task.deps)
         return False
 
     def complete(self, task: TaskInstance) -> list[TaskInstance]:
-        """Mark done; return children that became ready."""
+        """Mark done; return children that became ready.
+
+        Children are stored as tids and appended at submission time, so the
+        returned batch is deterministically in submission (tid) order — the
+        scheduler relies on this for reproducible launch logs.
+        """
         task.state = TaskState.DONE
         self.unfinished -= 1
         newly_ready = []
-        for child in task.children:
+        missing = self._missing_deps
+        for ctid in task.children:
+            child = self.tasks[ctid]
             if child.state != TaskState.PENDING:
                 continue
-            self._missing_deps[child.tid] -= 1
-            if self._missing_deps[child.tid] == 0:
+            missing[ctid] -= 1
+            if missing[ctid] == 0:
+                del missing[ctid]
                 child.state = TaskState.READY
                 newly_ready.append(child)
         return newly_ready
+
+    def fail(self, task: TaskInstance
+             ) -> tuple[list[TaskInstance], list[TaskInstance]]:
+        """Remove a FAILED task from the graph and cancel its descendants.
+
+        A PENDING task downstream of a failure can never have its missing
+        *data* dependency satisfied; without transitive cancellation those
+        tasks would keep ``unfinished`` positive forever and hang any drain
+        loop waiting on it. *Anti* edges (write-after-read) are instead
+        treated as satisfied — the failed predecessor will never touch the
+        handle — so their successors may become READY. Returns
+        ``(cancelled, newly_ready)``, each in submission order.
+        """
+        self.unfinished -= 1
+        cancelled: list[TaskInstance] = []
+        newly_ready: list[TaskInstance] = []
+        missing = self._missing_deps
+        stack = [task]
+        while stack:
+            failed = stack.pop()
+            for ctid in failed.children:
+                child = self.tasks.get(ctid)
+                if child is None or child.state != TaskState.PENDING:
+                    continue  # descendants of an unfinished failure that are
+                #               not DONE/FAILED are necessarily PENDING
+                if failed.tid in child.anti_deps:
+                    # ordering-only edge: satisfied by the cancellation
+                    missing[ctid] -= 1
+                    if missing[ctid] == 0:
+                        del missing[ctid]
+                        child.state = TaskState.READY
+                        newly_ready.append(child)
+                    continue
+                child.state = TaskState.FAILED
+                if child.error is None:
+                    child.error = RuntimeError(
+                        f"cancelled: ancestor "
+                        f"{failed.defn.name}#{failed.tid} failed")
+                missing.pop(ctid, None)
+                self.unfinished -= 1
+                cancelled.append(child)
+                stack.append(child)
+        cancelled.sort(key=lambda t: t.tid)
+        newly_ready.sort(key=lambda t: t.tid)
+        return cancelled, newly_ready

@@ -39,6 +39,13 @@ class StorageDevice:
         self.available_bw: float = self.bandwidth
         self.active_io: int = 0          # running I/O tasks on this device
         self.bytes_written: float = 0.0  # MB, for throughput reporting
+        self.rate_epoch: int = 0         # bumped whenever active_io changes:
+        #                                  the O(1) "did this device's rate
+        #                                  change" check for rate caches
+        self.release_epoch: int = 0      # bumped on releases only — the sole
+        #                                  rate-RAISING change, i.e. the only
+        #                                  one that can make cached finish-time
+        #                                  lower bounds stale-late
 
     # -- budget accounting (scheduler-facing) --------------------------------
     def can_allocate(self, bw: float) -> bool:
@@ -50,10 +57,13 @@ class StorageDevice:
                 f"over-allocating device {self.name}: want {bw}, have {self.available_bw}")
         self.available_bw -= bw
         self.active_io += 1
+        self.rate_epoch += 1
 
     def release(self, bw: float) -> None:
         self.available_bw += bw
         self.active_io -= 1
+        self.rate_epoch += 1
+        self.release_epoch += 1
         if self.active_io < 0 or self.available_bw > self.bandwidth + 1e-6:
             raise RuntimeError(f"bandwidth accounting underflow on {self.name}")
 
@@ -61,6 +71,8 @@ class StorageDevice:
         self.available_bw = self.bandwidth
         self.active_io = 0
         self.bytes_written = 0.0
+        self.rate_epoch += 1
+        self.release_epoch += 1
 
 
 @dataclass

@@ -25,7 +25,7 @@ from typing import Optional
 
 from .backends import Backend, RealBackend, SimBackend
 from .constraints import parse_storage_bw
-from .graph import TaskGraph
+from .graph import TaskGraph, _param_names
 from .resources import Cluster
 from .scheduler import Scheduler
 from .task import (Direction, Future, SimSpec, TaskDef, TaskInstance,
@@ -38,6 +38,12 @@ def current_runtime() -> Optional["IORuntime"]:
     return getattr(_current, "rt", None)
 
 
+#: call-time kwargs consumed by the runtime (see IORuntime docstring); a
+#: wrapped function must not declare parameters with these names, because
+#: the runtime strips them before the user function runs.
+RESERVED_KWARGS = ("io_mb", "duration", "storage_bw")
+
+
 class TaskFunction:
     """A decorated function: direct call without a runtime, task submission
     inside a runtime context."""
@@ -45,12 +51,21 @@ class TaskFunction:
     def __init__(self, defn: TaskDef):
         self.defn = defn
         self.__name__ = defn.name
+        clashes = [n for n in RESERVED_KWARGS if n in _param_names(defn)]
+        if clashes:
+            raise TypeError(
+                f"task {defn.name!r} declares reserved parameter(s) "
+                f"{clashes}: {', '.join(RESERVED_KWARGS)} are runtime "
+                f"execution-model kwargs and are stripped before the task "
+                f"body runs — rename the function parameter(s)")
 
     def __call__(self, *args, **kwargs):
         rt = current_runtime()
-        sim = SimSpec(duration=float(kwargs.pop("duration", 0.0)),
-                      io_bytes=float(kwargs.pop("io_mb", 0.0)))
-        bw_override = kwargs.pop("storage_bw", None)
+        # strip exactly the names validated at decoration time
+        reserved = {k: kwargs.pop(k, None) for k in RESERVED_KWARGS}
+        sim = SimSpec(duration=float(reserved["duration"] or 0.0),
+                      io_bytes=float(reserved["io_mb"] or 0.0))
+        bw_override = reserved["storage_bw"]
         if rt is None:
             return self.defn.fn(*args, **kwargs)
         return rt.submit(self.defn, args, kwargs, sim,
@@ -113,14 +128,28 @@ def wait_on(*futures):
 
 
 class IORuntime:
-    def __init__(self, cluster: Cluster, backend: Backend | str = "sim"):
+    """Master runtime: submission, dependency tracking, barriers, stats.
+
+    Reserved call-time kwargs — ``io_mb=``, ``duration=`` and
+    ``storage_bw=`` are consumed by the runtime itself (simulator execution
+    model and per-call constraint override) and never reach the task body;
+    decorating a function whose signature declares one of these names raises
+    ``TypeError`` at decoration time.
+
+    ``scheduler_cls`` exists for A/B comparisons (e.g. the frozen seed
+    scheduler in ``benchmarks/_seed_impl.py``); it must match the
+    ``Scheduler`` interface.
+    """
+
+    def __init__(self, cluster: Cluster, backend: Backend | str = "sim",
+                 scheduler_cls=Scheduler):
         self.cluster = cluster
         if isinstance(backend, str):
             backend = SimBackend() if backend == "sim" else RealBackend()
         self.backend = backend
         self.lock = threading.RLock()
         self.graph = TaskGraph()
-        self.scheduler = Scheduler(cluster, launch=self.backend.launch)
+        self.scheduler = scheduler_cls(cluster, launch=self.backend.launch)
         self.backend.bind(self)
         self._entered = False
 
@@ -159,10 +188,16 @@ class IORuntime:
         # called by the backend (sim loop / worker thread under runtime lock)
         self.scheduler.on_complete(task)
         if task.state != TaskState.FAILED:
-            for child in self.graph.complete(task):
-                self.scheduler.make_ready(child)
+            newly_ready = self.graph.complete(task)
+            if newly_ready:
+                self.scheduler.make_ready_many(newly_ready)
         else:
-            self.graph.unfinished -= 1  # failed task leaves the graph
+            # failed task leaves the graph and takes its (necessarily still
+            # PENDING) data-descendants with it, so drain loops can't hang on
+            # them; write-after-read successors are merely unblocked
+            _, newly_ready = self.graph.fail(task)
+            if newly_ready:
+                self.scheduler.make_ready_many(newly_ready)
 
     # ------------------------------------------------------------------ waits
     def barrier(self, final: bool = False) -> None:

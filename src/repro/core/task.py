@@ -129,7 +129,10 @@ class TaskInstance:
         self.storage_bw = storage_bw if storage_bw is not None else defn.storage_bw
         self.state = TaskState.PENDING
         self.deps: set[int] = set()          # tids this task waits on
-        self.children: list[TaskInstance] = []
+        self.anti_deps: set[int] = set()     # subset of deps that are
+        #                                      ordering-only (write-after-read)
+        self.children: list[int] = []        # dependents, by tid (submission
+        #                                      order; resolved via TaskGraph)
         self.futures = [Future(self, i) for i in range(max(defn.returns, 1))]
         # filled by the scheduler/backend
         self.worker = None
@@ -140,6 +143,8 @@ class TaskInstance:
         self.epoch = None                    # learning epoch membership
         self.retries = 0
         self.error: Optional[BaseException] = None
+        self._ready_seq = -1                 # global readiness order (scheduler)
+        self._sim_seq = -1                   # launch order (sim event queue)
 
     @property
     def duration(self) -> float:

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -115,7 +117,7 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0,
             pltpu.VMEM((block_q,), jnp.float32),       # running denom
             pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params()(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "parallel", "arbitrary")),
         interpret=interpret,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _ssd_kernel(la_ref, x_ref, b_ref, c_ref, dt_ref, d_ref,
                 y_ref, hlast_ref, h_ref, *, nc: int, chunk: int):
@@ -92,7 +94,7 @@ def ssd_scan_fwd(x, dt, B, C, la, D, *, block_h: int = 0, interpret=False):
             jax.ShapeDtypeStruct((b, H, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_h, N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params()(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(la, x, B, C, dt, D)

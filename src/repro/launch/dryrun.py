@@ -24,6 +24,7 @@ from pathlib import Path
 
 import jax
 
+from ..compat import cost_analysis_dict
 from ..configs import ARCHS, SHAPES, cell_supported, get_config
 from ..distributed import mesh_context
 from ..launch.mesh import make_production_mesh
@@ -192,10 +193,10 @@ def run_cell(arch: str, shape: str, mesh_kind: str, force: bool = False,
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
-            cost = compiled.cost_analysis() or {}
+            cost = cost_analysis_dict(compiled) or {}
             cost = {k: float(v) for k, v in cost.items()
-                    if isinstance(v, (int, float)) and (
-                        "flops" in k or "bytes" in k or "utilization" not in k)}
+                    if isinstance(v, (int, float))
+                    and "utilization" not in k}
             hlo = compiled.as_text()
             coll = parse_collectives(hlo)
             rec.update(

@@ -1,6 +1,6 @@
 import math
 
-from hypothesis import given, strategies as st
+from hypothesis_support import given, st
 
 from repro.core import AutoSpec
 from repro.core.autotune import AutoTuner, Phase
@@ -85,3 +85,21 @@ def test_objective_ceil_groups(n, c):
     tuner.registry = {c: 7.0}
     k = tuner._k_for(c)
     assert tuner.objective_time(n, c) == math.ceil(n / k) * 7.0
+
+
+def test_choose_argmin_deterministic():
+    """Pure-pytest fallback for the argmin property (runs w/o hypothesis)."""
+    tuner = AutoTuner("ck", AutoSpec(bounded=False), 450.0, 225)
+    tuner.registry = {2.0: 40.0, 8.0: 10.0, 16.0: 9.0, 32.0: 9.0}
+    tuner.phase = Phase.DONE
+    for n in (1, 56, 57, 500, 5000):
+        c = tuner.choose(n)
+        best = min(tuner.objective_time(n, cc) for cc in tuner.registry)
+        assert math.isclose(tuner.objective_time(n, c), best, rel_tol=1e-9)
+        for cc in tuner.registry:  # tie rule: highest constraint wins
+            if cc > c:
+                assert tuner.objective_time(n, cc) > best - 1e-12
+    # peek_choice is pure; record_choice does the bookkeeping
+    counts_before = dict(tuner._choice_counts)
+    assert tuner.peek_choice(500) in tuner.registry
+    assert tuner._choice_counts == counts_before

@@ -3,8 +3,11 @@ numerics vs the exact path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+from hypothesis_support import given, settings, st
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.optim.compression import (compressed_grads, dequantize_int8,
                                      quantize_int8)
@@ -21,6 +24,16 @@ def test_quant_roundtrip_error_bound(seed, scale):
     assert float(jnp.max(jnp.abs(back - g))) <= bound * 1.01
 
 
+def test_quant_roundtrip_error_bound_deterministic():
+    """Pure-pytest fallback for the roundtrip property."""
+    for seed, scale in ((0, 1.0), (1, 1e-3), (2, 1e3)):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+        q, s = quantize_int8(g)
+        back = dequantize_int8(q, s)
+        bound = float(jnp.max(jnp.abs(g))) / 254.0 + 1e-9
+        assert float(jnp.max(jnp.abs(back - g))) <= bound * 1.01
+
+
 def test_compressed_psum_matches_mean():
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
@@ -28,13 +41,14 @@ def test_compressed_psum_matches_mean():
     def f(g):
         return compressed_grads({"w": g}, "data")["w"]
 
-    out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                                out_specs=P("data")))(g)
+    out = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                            out_specs=P("data")))(g)
     # single-host mean == identity up to quantisation error
     rel = float(jnp.max(jnp.abs(out - g)) / jnp.max(jnp.abs(g)))
     assert rel < 1e-2
 
 
+@pytest.mark.slow  # full model + optimizer step: jax e2e tier
 def test_dp_step_with_compression_close_to_exact():
     """A tiny DP train step with compressed grads stays within quantisation
     tolerance of the exact step (same params, same batch)."""
@@ -58,8 +72,8 @@ def test_dp_step_with_compression_close_to_exact():
 
     def reduce_fn(g):
         return compressed_grads(g, "data")
-    gq = jax.jit(jax.shard_map(reduce_fn, mesh=mesh,
-                               in_specs=P(), out_specs=P()))(grads)
+    gq = jax.jit(shard_map(reduce_fn, mesh=mesh,
+                           in_specs=P(), out_specs=P()))(grads)
     p_comp, _, _ = adamw_update(gq, params, opt, acfg)
     deltas = jax.tree.map(
         lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) -

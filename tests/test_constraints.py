@@ -1,5 +1,5 @@
 import pytest
-from hypothesis import given, strategies as st
+from hypothesis_support import given, st
 
 from repro.core import AutoSpec, StaticSpec, parse_storage_bw
 
@@ -37,3 +37,12 @@ def test_parse_bounded_roundtrip(lo, span, delta):
     hi = lo + span
     spec = parse_storage_bw(f"auto({lo},{hi},{delta})")
     assert (spec.min, spec.max, spec.delta) == (lo, hi, delta)
+
+
+def test_roundtrips_deterministic():
+    """Pure-pytest fallback for the roundtrip properties."""
+    for x in (0.1, 1.0, 12.5, 450.0, 1e6):
+        assert parse_storage_bw(x).value == pytest.approx(x)
+    for lo, hi, delta in ((1, 1, 2), (2, 256, 2), (100, 110, 8)):
+        spec = parse_storage_bw(f"auto({lo},{hi},{delta})")
+        assert (spec.min, spec.max, spec.delta) == (lo, hi, delta)

@@ -5,9 +5,13 @@ XLA_FLAGS forcing 8 host devices, so the sharded program actually executes.
 2. Elastic restart: checkpoint written under a (4,2) mesh restores onto a
    (2,4) mesh and training continues (DESIGN.md §7).
 """
+import pytest
 import subprocess
 import sys
 from pathlib import Path
+
+pytestmark = pytest.mark.slow  # jax model / e2e tier (CI runs -m "not slow")
+
 
 ROOT = Path(__file__).resolve().parents[1]
 
@@ -100,7 +104,11 @@ def _run(prog, *args):
     return subprocess.run(
         [sys.executable, "-c", prog, *args], capture_output=True, text=True,
         timeout=420, env={"PYTHONPATH": f"{ROOT}/src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+                          "HOME": "/root",
+                          # force the CPU backend: without this, boxes with
+                          # TPU-capable jax burn ~8 min on TPU metadata
+                          # retries before falling back (and hit the timeout)
+                          "JAX_PLATFORMS": "cpu"})
 
 
 def test_sharded_train_step_matches_single_device():

@@ -1,6 +1,6 @@
 """Dependency-graph + scheduler invariants (unit + hypothesis properties)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_support import given, settings, st
 
 from repro.core import (Cluster, DataHandle, INOUT, IORuntime, SchedulerError,
                         SimBackend, constraint, io, task)
@@ -139,6 +139,29 @@ def test_random_chain_graph_respects_deps(edges):
             cons(outs[a], outs[b], duration=1)
         rt.barrier(final=True)
         done = {t.tid: t for t in rt.scheduler.completed}
+        for t in done.values():
+            for dep_tid in t.deps:
+                assert t.start_time >= done[dep_tid].end_time - 1e-9
+
+
+def test_chain_graph_respects_deps_deterministic():
+    """Pure-pytest fallback for the random-chain property: a fixed two-stage
+    graph (fan-in, fan-out, diamond, self-pair) respects every dependency."""
+    edges = [(0, 1), (0, 2), (1, 2), (3, 3), (4, 0), (2, 4), (9, 0), (5, 6)]
+    with IORuntime(small_cluster(), backend=SimBackend()) as rt:
+        @task(returns=1)
+        def prod(i):
+            pass
+
+        @task()
+        def cons(x, y):
+            pass
+        outs = [prod(i, duration=1 + i % 3) for i in range(10)]
+        for a, b in edges:
+            cons(outs[a], outs[b], duration=1)
+        rt.barrier(final=True)
+        done = {t.tid: t for t in rt.scheduler.completed}
+        assert len(done) == 10 + len(edges)
         for t in done.values():
             for dep_tid in t.deps:
                 assert t.start_time >= done[dep_tid].end_time - 1e-9

@@ -9,6 +9,9 @@ from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
 
 
+pytestmark = pytest.mark.slow  # jax model / e2e tier (CI runs -m "not slow")
+
+
 def rnd(key, shape, dtype):
     return jax.random.normal(jax.random.PRNGKey(key), shape,
                              jnp.float32).astype(dtype)

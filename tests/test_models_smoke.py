@@ -12,6 +12,9 @@ from repro.models.layers import pad_vocab
 B, S = 2, 32
 
 
+pytestmark = pytest.mark.slow  # jax model / e2e tier (CI runs -m "not slow")
+
+
 def make_batch(cfg, key):
     k1, k2, k3 = jax.random.split(key, 3)
     if cfg.input_mode == "tokens":

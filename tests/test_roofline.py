@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from benchmarks.analytic import cell_cost, roofline_terms
+from repro.compat import cost_analysis_dict
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -28,7 +29,7 @@ def _train_flops():
         loss, g = jax.value_and_grad(model.loss)(p, b)
         return adamw_update(g, p, o, acfg) + (loss,)
     c = jax.jit(step).lower(params, opt, batch).compile()
-    return c.cost_analysis()["flops"]
+    return cost_analysis_dict(c)["flops"]
 
 
 def test_analytic_train_flops_within_25pct_of_xla():
@@ -43,7 +44,7 @@ def test_analytic_prefill_flops_within_30pct_of_xla():
     batch = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
     c = jax.jit(lambda p, b: model.prefill(p, b, 128)).lower(
         params, batch).compile()
-    xla = c.cost_analysis()["flops"]
+    xla = cost_analysis_dict(c)["flops"]
     an = cell_cost(CFG, ShapeCell("p", 128, 4, "prefill")).flops
     assert 0.7 < an / xla < 1.3, (an, xla)
 

@@ -1,0 +1,26 @@
+"""Golden equivalence of the rewritten scheduler/simulator hot path.
+
+The frozen seed implementation (benchmarks/_seed_impl.py) and the rewrite
+must produce bit-identical launch logs and stats on the same workload —
+the scale speedup (BENCH_sched_scale.json) is only meaningful if the
+behaviour is unchanged.
+"""
+from benchmarks.sched_scale import golden_compare, run_workload
+from benchmarks._seed_impl import SeedScheduler, SeedSimBackend
+
+
+def test_golden_1k_identical():
+    report = golden_compare(1_000)  # raises AssertionError on any divergence
+    assert report["identical_launch_log"] and report["identical_stats"]
+
+
+def test_golden_small_odd_sizes():
+    # off-by-one shapes: partial learning epochs, a final straggler wave
+    for n in (3, 10, 137):
+        seed_log, seed_stats, _ = run_workload(
+            n, scheduler_cls=SeedScheduler, backend=SeedSimBackend())
+        new_log, new_stats, _ = run_workload(n)
+        assert seed_log == new_log
+        assert seed_stats["makespan"] == new_stats["makespan"]
+        assert seed_stats["total_io_mb"] == new_stats["total_io_mb"]
+        assert seed_stats["overlap_time"] == new_stats["overlap_time"]

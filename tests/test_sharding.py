@@ -3,7 +3,7 @@ import os
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_support import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import LOGICAL_RULES, spec_for
@@ -12,8 +12,12 @@ from repro.distributed.sharding import LOGICAL_RULES, spec_for
 @pytest.fixture(scope="module")
 def mesh():
     # AbstractMesh: pure shape logic, no devices needed — lets these
-    # properties exercise the production 16x16 shape on a 1-CPU box
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    # properties exercise the production 16x16 shape on a 1-CPU box.
+    # jax <= 0.4.x takes ((name, size), ...); newer takes (sizes, names).
+    try:
+        return jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
+    except TypeError:
+        return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
 
 
 def test_divisible_dims_shard(mesh):
@@ -32,6 +36,31 @@ def test_axis_never_reused(mesh):
     spec = spec_for((16, 16), ("embed", "embed"), mesh, LOGICAL_RULES)
     used = [s for s in spec if s is not None]
     assert len(used) == len(set(used)) <= 1
+
+
+def test_spec_valid_deterministic(mesh):
+    """Pure-pytest fallback for the validity property: fixed shapes covering
+    divisible, indivisible, duplicate-name and unnamed dims."""
+    cases = [
+        (("embed", "mlp"), (64, 32)),
+        (("embed", "mlp"), (7, 5)),
+        (("embed", "embed"), (16, 16)),
+        ((None, "vocab"), (3, 48)),
+        ((), ()),
+    ]
+    for names, shape in cases:
+        spec = spec_for(shape, names, mesh, LOGICAL_RULES)
+        used = []
+        for dim, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            size = 1
+            for a in parts:
+                assert a not in used
+                used.append(a)
+                size *= mesh.shape[a]
+            assert dim % size == 0
 
 
 @settings(max_examples=50, deadline=None)

@@ -1,4 +1,4 @@
-from hypothesis import given, strategies as st
+from hypothesis_support import given, st
 
 from repro.core import (StorageDevice, aggregate_throughput,
                         max_concurrent_tasks, per_task_rate)
@@ -45,3 +45,28 @@ def test_allocation_accounting():
     assert not d.can_allocate(100)
     d.release(400)
     assert d.can_allocate(450)
+
+
+def test_model_shape_deterministic():
+    """Pure-pytest fallback for the model properties: cap, ramp, congestion
+    checked exhaustively over a representative range."""
+    d = dev()
+    prev = None
+    for k in range(1, 300):
+        agg = aggregate_throughput(d, k)
+        assert agg <= d.bandwidth + 1e-9
+        assert per_task_rate(d, k) <= d.per_stream_cap + 1e-9
+        if k <= d.congestion_knee:
+            assert agg == k * d.per_stream_cap
+        elif k > d.congestion_knee + 1:
+            assert agg < prev  # strictly degrading past the knee
+        prev = agg
+
+
+def test_rate_epoch_tracks_population():
+    d = dev()
+    e0 = d.rate_epoch
+    d.allocate(8)
+    assert d.rate_epoch == e0 + 1
+    d.release(8)
+    assert d.rate_epoch == e0 + 2

@@ -1,4 +1,5 @@
 """End-to-end integration: train -> checkpoint -> kill -> resume."""
+import pytest
 import json
 
 import jax.numpy as jnp
@@ -6,11 +7,17 @@ import jax.numpy as jnp
 from repro.launch.train import PRESETS, train
 
 
+pytestmark = pytest.mark.slow  # jax model / e2e tier (CI runs -m "not slow")
+
+
 def test_train_loss_improves(tmp_path):
-    out = train(PRESETS["5m"], steps=8, batch=2, seq=32, ckpt_dir=None,
+    out = train(PRESETS["5m"], steps=16, batch=2, seq=32, ckpt_dir=None,
                 ckpt_every=0, io_aware=True)
-    assert out["steps_run"] == 8
-    assert out["final_loss"] < out["losses"][0]
+    assert out["steps_run"] == 16
+    # every step's loss is measured on a different (noisy) batch of 2, so the
+    # endpoints alone are dominated by batch variance: compare window means
+    ls = out["losses"]
+    assert sum(ls[-3:]) / 3 < sum(ls[:3]) / 3
 
 
 def test_resume_continues_from_checkpoint(tmp_path):
