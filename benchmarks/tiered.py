@@ -1,0 +1,149 @@
+"""Tiered-storage benchmark: burst-buffer checkpoint drain vs shared-FS.
+
+The scenario is the pod-scale checkpoint loop: a chain of training steps
+periodically snapshots ``n_shards`` shards. The snapshot buffer is reused,
+so the step after a checkpoint is gated on the shards having been *absorbed*
+by storage (written out of memory) — the classic burst-buffer motivation.
+
+* **baseline** — one shared parallel-FS device for everyone
+  (``Cluster.make(shared_storage=True)``): absorption means writing through
+  the congested FS, so every checkpoint stalls the step chain behind it.
+* **tiered** — ``Cluster.make_tiered`` (node-local SSD → burst buffer →
+  shared FS): shards are absorbed by the fast tier in a fraction of the
+  time, and runtime-generated **drain** I/O tasks (``rt.drain``) write them
+  back to the shared FS asynchronously, overlapping with all subsequent
+  compute. Both runs end with every byte durably on the FS tier.
+
+The tiered makespan must beat the baseline; the JSON records both, the
+overlap gained, and per-tier byte occupancy.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.tiered \
+        [--steps 80] [--out BENCH_tiered.json]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import time
+
+from repro.core import Cluster, IORuntime, SimBackend, constraint, io, task
+from repro.core.task import TaskInstance
+
+# NVMe-class SSD over a DataWarp-like burst buffer over a congested
+# parallel FS: the bench's own calibration (the paper's fsync-bound SSD
+# numbers live in the default Cluster.make / figure benchmarks)
+SSD_BW, SSD_CAP = 1500.0, 200.0
+BB_BW, BB_CAP = 4000.0, 400.0
+FS_BW, FS_CAP = 600.0, 50.0
+
+
+def _reset_ids() -> None:
+    TaskInstance._ids = itertools.count()
+
+
+def run_scenario(tiered: bool, n_steps: int = 80, ckpt_every: int = 10,
+                 n_shards: int = 8, shard_mb: float = 128.0,
+                 step_s: float = 0.5, shard_bw: float = 50.0,
+                 drain_bw: float = 70.0, n_workers: int = 4) -> dict:
+    """One run; returns stats + scenario bookkeeping."""
+    _reset_ids()
+    if tiered:
+        cluster = Cluster.make_tiered(
+            n_workers=n_workers, cpus=8, io_executors=32,
+            ssd_bw=SSD_BW, ssd_stream_cap=SSD_CAP,
+            bb_bw=BB_BW, bb_stream_cap=BB_CAP,
+            fs_bw=FS_BW, fs_stream_cap=FS_CAP)
+    else:
+        cluster = Cluster.make(
+            n_workers=n_workers, cpus=8, io_executors=32,
+            device_bw=FS_BW, per_stream_cap=FS_CAP, shared_storage=True)
+
+    t0 = time.perf_counter()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @task(returns=1)
+        def step(prev, gate, i):
+            pass
+
+        @constraint(storageBW=shard_bw)
+        @io
+        @task(returns=1)
+        def write_shard(x, i, j):
+            pass
+
+        prev, gate = None, None
+        for i in range(n_steps):
+            prev = step(prev, gate, i, duration=step_s)
+            if (i + 1) % ckpt_every == 0:
+                # snapshot buffer reuse: the next step waits until every
+                # shard left memory — absorbed by the fastest tier available
+                absorbed = [write_shard(prev, i, j, io_mb=shard_mb)
+                            for j in range(n_shards)]
+                gate = absorbed
+                if tiered:
+                    # write-back to the durable FS tier rides in the shadow
+                    # of the remaining compute; nothing waits on it before
+                    # the final barrier
+                    for a in absorbed:
+                        rt.drain(a, to_tier="fs", from_tier="ssd",
+                                 io_mb=shard_mb, storage_bw=drain_bw)
+        rt.barrier(final=True)
+        stats = rt.stats()
+    stats["wall_seconds"] = time.perf_counter() - t0
+    stats["fs_mb"] = sum(d["bytes_written"]
+                         for d in stats["devices"].values()
+                         if d["tier"] == "fs")
+    return stats
+
+
+def compare(n_steps: int = 80, **kw) -> dict:
+    base = run_scenario(tiered=False, n_steps=n_steps, **kw)
+    tier = run_scenario(tiered=True, n_steps=n_steps, **kw)
+    # both runs persisted the same bytes to the durable FS tier
+    assert abs(base["fs_mb"] - tier["fs_mb"]) < 1e-6, \
+        (base["fs_mb"], tier["fs_mb"])
+    speedup = base["makespan"] / tier["makespan"]
+    return {
+        "n_steps": n_steps,
+        "baseline": {
+            "makespan": base["makespan"],
+            "overlap_time": base["overlap_time"],
+            "io_busy_time": base["io_busy_time"],
+            "devices": base["devices"],
+        },
+        "tiered": {
+            "makespan": tier["makespan"],
+            "overlap_time": tier["overlap_time"],
+            "io_busy_time": tier["io_busy_time"],
+            "devices": tier["devices"],
+        },
+        "fs_mb_durable": base["fs_mb"],
+        "speedup": speedup,
+        "tiered_wins": tier["makespan"] < base["makespan"],
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--out", default="BENCH_tiered.json")
+    args = ap.parse_args(argv)
+    report = compare(n_steps=args.steps)
+    b, t = report["baseline"], report["tiered"]
+    print(f"baseline (shared FS only): makespan {b['makespan']:.2f}s, "
+          f"overlap {b['overlap_time']:.2f}s")
+    print(f"tiered (ssd->bb->fs + drains): makespan {t['makespan']:.2f}s, "
+          f"overlap {t['overlap_time']:.2f}s")
+    print(f"speedup {report['speedup']:.2f}x "
+          f"({report['fs_mb_durable']:.0f} MB durable on FS in both)")
+    assert report["tiered_wins"], "tiered run must beat the baseline"
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Burst-buffer checkpointing on the real backend.
+
+A tiny train loop snapshots its state every few steps. With
+``CheckpointManager(fast_dir=...)`` each shard is written (fsync'd) to the
+fast tier first — absorbing the write burst at SSD/burst-buffer speed —
+then drained to the durable shared directory by background drain I/O tasks;
+the manifest commits on the shared side only after every shard landed, so
+restarts never observe a half-drained checkpoint. ``RealBackend(tier_dirs=)``
+gives the runtime the tier→directory mapping used by ``rt.drain`` /
+``rt.prefetch`` for ad-hoc file movement.
+
+Run:  PYTHONPATH=src python examples/burst_buffer_checkpoint.py
+"""
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import (Cluster, IORuntime, RealBackend, StorageDevice,
+                        WorkerNode, task)
+
+
+@task(returns=1)
+def train_step(state, i):
+    return {k: v + 0.1 for k, v in state.items()}
+
+
+def main():
+    root = Path(tempfile.mkdtemp(prefix="bb_ckpt_"))
+    bb_dir, fs_dir = root / "burst_buffer", root / "shared_fs"
+
+    ssd = StorageDevice(name="local-ssd", bandwidth=2000, per_stream_cap=500)
+    fs = StorageDevice(name="pfs", bandwidth=400, per_stream_cap=80,
+                       tier="fs")
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=4, io_executors=8,
+                                          tiers=[ssd, fs])])
+    mgr = CheckpointManager(fs_dir, n_shards=4, fast_dir=bb_dir, drain_bw=80,
+                            overrun_policy="wait")
+
+    state = {"w": np.random.default_rng(0).normal(size=(256, 256)),
+             "b": np.zeros(256)}
+    backend = RealBackend(tier_dirs={"ssd": bb_dir, "fs": fs_dir})
+    with IORuntime(cluster, backend=backend) as rt:
+        fut = None
+        for i in range(6):
+            fut = train_step(state if fut is None else fut, i)
+            if (i + 1) % 2 == 0:
+                snap = rt.wait_on(fut)
+                mgr.save(i + 1, snap)
+                print(f"step {i + 1}: checkpoint dispatched "
+                      f"(fast tier: {bb_dir.name})")
+        mgr.wait()
+
+    restored, step = mgr.restore(state)
+    print(f"restored step {step}: w mean {restored['w'].mean():+.4f}")
+    drained = sorted(p.name for p in
+                     (fs_dir / f"step_{step:08d}").glob("shard_*.bin"))
+    print(f"durable shards on shared FS: {drained}")
+
+
+if __name__ == "__main__":
+    main()

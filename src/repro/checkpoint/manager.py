@@ -6,6 +6,15 @@ Each shard write is an I/O task (``@io`` + ``storageBW="auto"`` by default):
 it overlaps with subsequent train steps, and the auto-tuner learns how many
 shards may write concurrently before the storage device congests — exactly
 the paper's checkpointFrag scenario (§5.2.1).
+
+Burst-buffer mode (``fast_dir=``): shards are first written to a fast tier
+(node-local SSD / burst buffer directory), then *drained* to the shared
+``directory`` by runtime-generated drain I/O tasks that overlap with
+subsequent compute; the manifest commits on the shared FS only after every
+shard has landed there (manifest-last stays atomic), so a restart never
+sees a checkpoint whose shards still live only in the volatile fast tier.
+On a tiered cluster the drain tasks carry a ``storage_tier="fs"`` hint so
+the simulator/scheduler charges them to the shared-FS device.
 """
 from __future__ import annotations
 
@@ -20,6 +29,7 @@ import jax
 import numpy as np
 
 from ..core import IORuntime, constraint, current_runtime, io, task
+from ..core.runtime import copy_fsync
 from .serializer import (flatten_with_paths, plan_shards, read_shard,
                          unflatten_like, write_shard)
 
@@ -29,6 +39,16 @@ from .serializer import (flatten_with_paths, plan_shards, read_shard,
 @task(returns=1)
 def _write_shard_task(path_str, entries):
     return write_shard(Path(path_str), entries)
+
+
+@constraint(maxRetries=2)
+@io
+@task(returns=1)
+def _drain_shard_task(frag, src_path, dst_path):
+    """Copy one shard from the fast tier to the shared FS (fsync'd), passing
+    the manifest fragment through so the commit can depend on the drain."""
+    copy_fsync(src_path, dst_path)
+    return frag
 
 
 @io
@@ -44,13 +64,24 @@ def _commit_task(manifest_path, step, frags, t0):
 
 
 class CheckpointManager:
+    """``directory`` is the durable (shared-FS) home of checkpoints.
+    ``fast_dir`` enables burst-buffer mode: async saves write shards there
+    first and drain them to ``directory`` in the background; ``drain_bw``
+    optionally throttles each drain stream (static MB/s or "auto") so the
+    write-back doesn't congest the shared FS."""
+
     def __init__(self, directory, n_shards: int = 8,
-                 overrun_policy: str = "skip", keep: int = 3):
+                 overrun_policy: str = "skip", keep: int = 3,
+                 fast_dir=None, drain_bw=None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
         self.overrun_policy = overrun_policy  # skip | wait
         self.keep = keep
+        self.fast_dir = Path(fast_dir) if fast_dir is not None else None
+        if self.fast_dir is not None:
+            self.fast_dir.mkdir(parents=True, exist_ok=True)
+        self.drain_bw = drain_bw
         self._in_flight = None  # (step, commit future)
 
     # ------------------------------------------------------------------ save
@@ -80,13 +111,35 @@ class CheckpointManager:
             tmp = step_dir / "MANIFEST.json.tmp"
             tmp.write_text(json.dumps(manifest, indent=1))
             os.replace(tmp, step_dir / "MANIFEST.json")
-        else:
+        elif self.fast_dir is None:
             futs = [_write_shard_task(str(step_dir / f"shard_{i:04d}.bin"),
                                       entries,
                                       io_mb=sum(a.nbytes for _, a in entries)
                                       / 1e6)
                     for i, entries in enumerate(plan) if entries]
             commit = _commit_task(step_dir / "MANIFEST.json", step, futs, t0)
+            self._in_flight = (step, commit)
+        else:
+            # burst-buffer mode: absorb the write burst on the fast tier,
+            # drain to the shared FS asynchronously, commit manifest-last on
+            # the shared FS once every shard has landed there
+            fast_step = self.fast_dir / f"step_{step:08d}"
+            fast_step.mkdir(parents=True, exist_ok=True)
+            fs_hint = "fs" if rt.cluster.has_tier("fs") else None
+            drained = []
+            for i, entries in enumerate(plan):
+                if not entries:
+                    continue
+                name = f"shard_{i:04d}.bin"
+                mb = sum(a.nbytes for _, a in entries) / 1e6
+                wf = _write_shard_task(str(fast_step / name), entries,
+                                       io_mb=mb)
+                drained.append(_drain_shard_task(
+                    wf, str(fast_step / name), str(step_dir / name),
+                    io_mb=mb, storage_tier=fs_hint,
+                    storage_bw=self.drain_bw))
+            commit = _commit_task(step_dir / "MANIFEST.json", step,
+                                  drained, t0)
             self._in_flight = (step, commit)
         self._gc()
         return True
@@ -139,3 +192,6 @@ class CheckpointManager:
         steps = self.steps()
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+            if self.fast_dir is not None:
+                shutil.rmtree(self.fast_dir / f"step_{s:08d}",
+                              ignore_errors=True)

@@ -12,8 +12,9 @@ from .constraints import AutoSpec, StaticSpec, parse_storage_bw
 from .resources import Cluster, StorageDevice, WorkerNode
 from .runtime import IORuntime, constraint, current_runtime, io, task, wait_on
 from .scheduler import SchedulerError
-from .storage_model import (aggregate_throughput, expected_task_time,
-                            max_concurrent_tasks, per_task_rate)
+from .storage_model import (aggregate_throughput, cross_tier_time,
+                            expected_task_time, max_concurrent_tasks,
+                            per_task_rate, read_floor_time)
 from .task import IN, INOUT, OUT, DataHandle, Direction, Future, TaskState
 
 __all__ = [
@@ -22,5 +23,5 @@ __all__ = [
     "AutoSpec", "StaticSpec", "parse_storage_bw", "SchedulerError",
     "IN", "INOUT", "OUT", "Direction", "DataHandle", "Future", "TaskState",
     "aggregate_throughput", "per_task_rate", "expected_task_time",
-    "max_concurrent_tasks",
+    "max_concurrent_tasks", "cross_tier_time", "read_floor_time",
 ]

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -105,7 +106,7 @@ class SimBackend(Backend):
 
     def _true_finish(self, rec: list) -> float:
         task, rem, min_end = rec
-        dev = task.worker.storage
+        dev = task.device or task.worker.storage
         rate = per_task_rate(dev, dev.active_io)
         eta = self.clock + rem / rate if rate > 0 else float("inf")
         return max(eta, min_end)
@@ -140,7 +141,9 @@ class SimBackend(Backend):
             min_end = self.clock + max(task.sim.duration, _EPS)
             rec = [task, rem, min_end]
             self._io[task.tid] = rec
-            dev = worker.storage
+            # the device the scheduler granted (a tier of the worker); falls
+            # back to the worker's primary device for bare/legacy launches
+            dev = task.device or worker.storage
             entry = self._dev_tasks.get(id(dev))
             if entry is None:
                 entry = self._dev_tasks[id(dev)] = (dev, set())
@@ -187,7 +190,7 @@ class SimBackend(Backend):
         interval_mb = 0.0
         for rec in self._io.values():
             task, rem, _ = rec
-            dev = task.worker.storage
+            dev = task.device or task.worker.storage
             rate = per_task_rate(dev, dev.active_io)
             moved = min(rem, rate * dt)
             rec[1] = rem - moved
@@ -205,7 +208,8 @@ class SimBackend(Backend):
     def _finish_io(self, tid: int) -> TaskInstance:
         task, _, _ = self._io.pop(tid)
         self._entry_ver.pop(tid, None)
-        self._dev_tasks[id(task.worker.storage)][1].discard(tid)
+        dev = task.device or task.worker.storage
+        self._dev_tasks[id(dev)][1].discard(tid)
         return task
 
     def _pop_due(self) -> list[TaskInstance]:
@@ -266,6 +270,16 @@ class SimBackend(Backend):
             self._advance_to(t)
             for task in self._pop_due():
                 task.end_time = self.clock
+                if task.sim.fail:
+                    # fault injection (sim_fail=True at call time): the task
+                    # consumed its resources and time, then FAILs — the
+                    # runtime cancels its data-descendants. Non-raising:
+                    # post-mortem inspection happens via graph states.
+                    task.state = TaskState.FAILED
+                    if task.error is None:
+                        task.error = RuntimeError(
+                            f"injected failure: "
+                            f"{task.defn.name}#{task.tid}")
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
@@ -276,12 +290,27 @@ class SimBackend(Backend):
 # Real (threaded) backend
 # --------------------------------------------------------------------------
 class RealBackend(Backend):
-    def __init__(self, poll_interval: float = 0.02):
+    """Threaded backend. ``tier_dirs`` maps tier labels to directories
+    (e.g. ``{"ssd": "/nvme/scratch", "fs": "/gpfs/ckpt"}``) so runtime-
+    generated drain/prefetch tasks can move files between tiers; see
+    ``IORuntime.drain``/``IORuntime.prefetch``."""
+
+    def __init__(self, poll_interval: float = 0.02,
+                 tier_dirs: Optional[dict] = None):
         self._t0 = time.monotonic()
         self._pools: dict[tuple[str, str], ThreadPoolExecutor] = {}
         self._cv = threading.Condition()  # rebound to runtime.lock in bind()
         self._poll = poll_interval
         self._failed: list[TaskInstance] = []
+        self.tier_dirs = dict(tier_dirs) if tier_dirs else {}
+
+    def tier_path(self, tier: str, name: str) -> Optional[str]:
+        """Absolute path of ``name`` inside ``tier``'s directory, or None
+        when the tier has no directory mapping."""
+        base = self.tier_dirs.get(tier)
+        if base is None:
+            return None
+        return os.path.join(str(base), name)
 
     def bind(self, runtime) -> None:
         super().bind(runtime)

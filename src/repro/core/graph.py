@@ -97,6 +97,8 @@ class TaskGraph:
             task.state = TaskState.FAILED
             task.error = RuntimeError(
                 f"cancelled: ancestor {dead.defn.name}#{dead.tid} failed")
+            for f in task.futures:
+                f.set_value(None)  # cancelled: resolve so waiters can't hang
             return False
         self.unfinished += 1
         if not task.deps:
@@ -164,6 +166,9 @@ class TaskGraph:
                     child.error = RuntimeError(
                         f"cancelled: ancestor "
                         f"{failed.defn.name}#{failed.tid} failed")
+                for f in child.futures:
+                    f.set_value(None)  # resolve: wait_on a cancelled task's
+                #                        future must return, not hang a drain
                 missing.pop(ctid, None)
                 self.unfinished -= 1
                 cancelled.append(child)

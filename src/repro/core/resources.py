@@ -1,14 +1,30 @@
-"""Resource descriptions: workers, storage devices, bandwidth accounting.
+"""Resource descriptions: workers, storage tiers, bandwidth accounting.
 
 Mirrors the COMPSs resource-description file (paper §4.1.2) extended with a
-maximum I/O bandwidth per storage device (paper §4.2.2). Bandwidth is
-accounted per *device*: node-local SSDs are one device per worker (the
-paper's MareNostrum-4 setup); a shared filesystem / object store is a single
-device referenced by every worker (the pod-scale checkpoint case).
+maximum I/O bandwidth per storage device (paper §4.2.2), generalised to a
+**multi-tier storage hierarchy**: each worker carries an *ordered* list of
+tiers (fastest first), each tier its own :class:`StorageDevice` with an
+independent bandwidth budget and congestion calibration. The paper's
+single-device MareNostrum-4 setup is the one-tier special case
+(:meth:`Cluster.make`); :meth:`Cluster.make_tiered` builds the
+SSD → burst-buffer → shared-FS layering of modern HPC platforms.
+
+Tier model
+----------
+* ``WorkerNode.tiers`` is ordered fastest-first; ``WorkerNode.storage`` is an
+  alias for ``tiers[0]`` (the node-local device) so single-tier code — and
+  the frozen seed scheduler in ``benchmarks/_seed_impl.py`` — is unchanged.
+* A :class:`StorageDevice` may be *shared* between workers simply by placing
+  the same instance in several tier lists (the burst buffer and the shared
+  filesystem below); bandwidth is always accounted per *device*, so a shared
+  tier is a single budget no matter how many workers reference it.
+* ``StorageDevice.tier`` is the tier label tasks target via the ``tier=``
+  hint on ``@constraint`` or the per-call ``storage_tier=`` override
+  (see ``runtime.py``); the scheduler's default policy is label-free:
+  prefer the fastest tier with budget, fall back down the hierarchy.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -21,7 +37,8 @@ class StorageDevice:
     from (MB/s). The congestion model parameters describe how the *achieved*
     aggregate throughput behaves as a function of the number of concurrent
     streams (see storage_model.py); they drive the simulator and default to
-    the MareNostrum-4 node-local SSD calibration from the paper.
+    the MareNostrum-4 node-local SSD calibration from the paper. Each tier of
+    a hierarchy is its own device with its own calibration.
     """
 
     name: str
@@ -31,6 +48,7 @@ class StorageDevice:
     congestion_beta: float = 1e-5   # quadratic term: fsync seek-thrash at
     #                                 very high concurrency is superlinear
     congestion_knee: Optional[int] = None  # default: bandwidth/per_stream_cap
+    tier: str = "ssd"               # tier label (targetable via tier= hints)
 
     def __post_init__(self):
         if self.congestion_knee is None:
@@ -78,26 +96,50 @@ class StorageDevice:
 @dataclass
 class WorkerNode:
     """A worker with a compute execution platform and an I/O execution
-    platform (paper Fig. 7)."""
+    platform (paper Fig. 7), fronting an ordered storage hierarchy.
+
+    ``tiers`` lists the storage devices reachable from this node, fastest
+    first; ``storage`` stays the legacy alias for ``tiers[0]``. Constructing
+    with only ``storage=`` (or nothing) yields the paper's one-tier node.
+    """
 
     name: str
     cpus: int = 48
     io_executors: int = 225
-    storage: StorageDevice = None  # node-local device (or shared instance)
+    storage: StorageDevice = None  # node-local device (alias for tiers[0])
+    tiers: list = None             # ordered hierarchy, fastest first
 
     def __post_init__(self):
-        if self.storage is None:
-            self.storage = StorageDevice(name=f"{self.name}-ssd")
+        if self.tiers is None:
+            if self.storage is None:
+                self.storage = StorageDevice(name=f"{self.name}-ssd")
+            self.tiers = [self.storage]
+        else:
+            if not self.tiers:
+                raise ValueError(f"worker {self.name}: tiers must be non-empty")
+            if self.storage is not None and self.storage is not self.tiers[0]:
+                raise ValueError(
+                    f"worker {self.name}: storage= and tiers[0] disagree — "
+                    f"pass one or the other")
+            self.storage = self.tiers[0]
         self.free_cpus: int = self.cpus
         self.free_io_executors: int = self.io_executors
         self.learning_owner = None   # signature owning this node as an
         #                              active-learning node (paper §4.2.3B)
 
+    def tier_device(self, tier: str) -> Optional[StorageDevice]:
+        """The device backing tier label ``tier`` on this node, or None."""
+        for d in self.tiers:
+            if d.tier == tier:
+                return d
+        return None
+
     def reset(self):
         self.free_cpus = self.cpus
         self.free_io_executors = self.io_executors
         self.learning_owner = None
-        self.storage.reset()
+        for d in self.tiers:
+            d.reset()
 
 
 @dataclass
@@ -121,7 +163,8 @@ class Cluster:
         shared_dev = StorageDevice(
             name="shared-fs", bandwidth=device_bw,
             per_stream_cap=per_stream_cap,
-            congestion_alpha=congestion_alpha) if shared_storage else None
+            congestion_alpha=congestion_alpha,
+            tier="fs") if shared_storage else None
         workers = []
         for i in range(n_workers):
             dev = shared_dev or StorageDevice(
@@ -132,14 +175,70 @@ class Cluster:
                 name=f"w{i}", cpus=cpus, io_executors=io_executors, storage=dev))
         return Cluster(workers=workers)
 
+    @staticmethod
+    def make_tiered(n_workers: int = 12, cpus: int = 48,
+                    io_executors: int = 225,
+                    ssd_bw: float = 450.0, ssd_stream_cap: float = 8.0,
+                    bb_bw: float = 1600.0, bb_stream_cap: float = 40.0,
+                    fs_bw: float = 300.0, fs_stream_cap: float = 4.0,
+                    congestion_alpha: float = 0.004) -> "Cluster":
+        """Three-tier hierarchy: node-local SSD → shared burst buffer →
+        shared parallel FS.
+
+        The SSD tier is one device *per worker* (as in :meth:`make`); the
+        burst buffer and the shared FS are each a single shared device
+        referenced by every worker, so their budgets are cluster-global.
+        Defaults sketch a DataWarp-like burst buffer (high aggregate
+        bandwidth, generous per-stream rate) over a congested parallel FS
+        (modest aggregate bandwidth shared by everyone).
+        """
+        bb = StorageDevice(name="burst-buffer", bandwidth=bb_bw,
+                           per_stream_cap=bb_stream_cap,
+                           congestion_alpha=congestion_alpha, tier="bb")
+        fs = StorageDevice(name="shared-fs", bandwidth=fs_bw,
+                           per_stream_cap=fs_stream_cap,
+                           congestion_alpha=congestion_alpha, tier="fs")
+        workers = []
+        for i in range(n_workers):
+            ssd = StorageDevice(name=f"w{i}-ssd", bandwidth=ssd_bw,
+                                per_stream_cap=ssd_stream_cap,
+                                congestion_alpha=congestion_alpha, tier="ssd")
+            workers.append(WorkerNode(
+                name=f"w{i}", cpus=cpus, io_executors=io_executors,
+                tiers=[ssd, bb, fs]))
+        return Cluster(workers=workers)
+
     @property
     def devices(self):
         seen, out = set(), []
         for w in self.workers:
-            if id(w.storage) not in seen:
-                seen.add(id(w.storage))
-                out.append(w.storage)
+            for d in w.tiers:
+                if id(d) not in seen:
+                    seen.add(id(d))
+                    out.append(d)
         return out
+
+    def tier_names(self) -> list:
+        """Distinct tier labels present in the cluster, hierarchy order."""
+        seen, out = set(), []
+        for w in self.workers:
+            for d in w.tiers:
+                if d.tier not in seen:
+                    seen.add(d.tier)
+                    out.append(d.tier)
+        return out
+
+    def has_tier(self, tier: str) -> bool:
+        return any(w.tier_device(tier) is not None for w in self.workers)
+
+    def tier_spec(self, tier: str) -> Optional[StorageDevice]:
+        """A representative device for ``tier`` (the first worker's), used
+        for analytic estimates like cross-tier read floors."""
+        for w in self.workers:
+            d = w.tier_device(tier)
+            if d is not None:
+                return d
+        return None
 
     def reset(self):
         for w in self.workers:

@@ -17,9 +17,34 @@
 
 ``io_mb=`` / ``duration=`` call-time kwargs feed the simulator's execution
 model and are stripped before the user function sees its arguments.
+
+Storage tiers
+-------------
+On a tiered cluster (``Cluster.make_tiered``: node-local SSD → shared burst
+buffer → shared FS) an I/O task is placed on the fastest tier with budget by
+default. Two hints pin it instead:
+
+* ``@constraint(tier="bb")`` — every invocation targets the named tier;
+* ``storage_tier="fs"`` at call time — per-invocation override, analogous
+  to ``storage_bw=``.
+
+Data moves *between* tiers through runtime-generated I/O tasks:
+``rt.drain(fut, to_tier="fs", from_tier="ssd", io_mb=64)`` schedules an
+asynchronous write-back (fast → slow) and ``rt.prefetch(...)`` the reverse;
+both return Futures and overlap with compute like any other I/O task. Under
+``RealBackend(tier_dirs={...})`` a ``path=`` names the file to copy between
+the tier directories; under ``SimBackend`` the transfer is modelled with the
+source tier's read floor and the destination tier's congestion.
+
+``sim_fail=True`` at call time injects a failure at the task's simulated
+completion (SimBackend only): the task FAILs and its data-descendants are
+cancelled — the property-test harness drives fault-tolerance invariants
+through this.
 """
 from __future__ import annotations
 
+import os
+import shutil
 import threading
 from typing import Optional
 
@@ -28,6 +53,7 @@ from .constraints import parse_storage_bw
 from .graph import TaskGraph, _param_names
 from .resources import Cluster
 from .scheduler import Scheduler
+from .storage_model import read_floor_time
 from .task import (Direction, Future, SimSpec, TaskDef, TaskInstance,
                    TaskState, TaskType)
 
@@ -41,7 +67,8 @@ def current_runtime() -> Optional["IORuntime"]:
 #: call-time kwargs consumed by the runtime (see IORuntime docstring); a
 #: wrapped function must not declare parameters with these names, because
 #: the runtime strips them before the user function runs.
-RESERVED_KWARGS = ("io_mb", "duration", "storage_bw")
+RESERVED_KWARGS = ("io_mb", "duration", "storage_bw", "storage_tier",
+                   "sim_fail")
 
 
 class TaskFunction:
@@ -64,13 +91,15 @@ class TaskFunction:
         # strip exactly the names validated at decoration time
         reserved = {k: kwargs.pop(k, None) for k in RESERVED_KWARGS}
         sim = SimSpec(duration=float(reserved["duration"] or 0.0),
-                      io_bytes=float(reserved["io_mb"] or 0.0))
+                      io_bytes=float(reserved["io_mb"] or 0.0),
+                      fail=bool(reserved["sim_fail"]))
         bw_override = reserved["storage_bw"]
         if rt is None:
             return self.defn.fn(*args, **kwargs)
         return rt.submit(self.defn, args, kwargs, sim,
                          storage_bw=parse_storage_bw(bw_override)
-                         if bw_override is not None else None)
+                         if bw_override is not None else None,
+                         storage_tier=reserved["storage_tier"])
 
 
 def _as_taskfn(fn) -> TaskFunction:
@@ -105,8 +134,11 @@ def io(fn):
 
 
 def constraint(computingUnits: int | None = None, storageBW=None,
-               maxRetries: int | None = None):
-    """@constraint(computingUnits=2) / @constraint(storageBW="auto(2,256,2)")."""
+               maxRetries: int | None = None, tier: str | None = None):
+    """@constraint(computingUnits=2) / @constraint(storageBW="auto(2,256,2)")
+    / @constraint(tier="bb") — ``tier`` pins the task's I/O to the named
+    storage tier (default: the fastest tier with budget, falling down the
+    hierarchy)."""
     def wrap(fn):
         tf = _as_taskfn(fn)
         if computingUnits is not None:
@@ -115,6 +147,8 @@ def constraint(computingUnits: int | None = None, storageBW=None,
             tf.defn.storage_bw = parse_storage_bw(storageBW)
         if maxRetries is not None:
             tf.defn.max_retries = int(maxRetries)
+        if tier is not None:
+            tf.defn.storage_tier = str(tier)
         return tf
     return wrap
 
@@ -125,6 +159,40 @@ def wait_on(*futures):
     if rt is None:
         raise RuntimeError("wait_on outside an IORuntime context")
     return rt.wait_on(*futures)
+
+
+# --------------------------------------------------------------------------
+# Runtime-generated data movement between tiers (drain / prefetch)
+# --------------------------------------------------------------------------
+def copy_fsync(src_path, dst_path) -> str:
+    """Durable copy: the write side is flushed and fsync'd before the call
+    returns (the shared primitive under drain/prefetch movers and the
+    checkpoint manager's shard drains)."""
+    os.makedirs(os.path.dirname(dst_path) or ".", exist_ok=True)
+    with open(src_path, "rb") as s, open(dst_path, "wb") as d:
+        shutil.copyfileobj(s, d)
+        d.flush()
+        os.fsync(d.fileno())
+    return str(dst_path)
+
+
+def _make_mover(name: str) -> TaskFunction:
+    """One I/O task signature per movement direction, so each gets its own
+    placement class and (if auto-constrained) its own per-tier tuner."""
+    def _move(data, src_path, dst_path):
+        # RealBackend: copy+fsync between tier directories when both paths
+        # resolved; SimBackend never executes this body — the transfer is
+        # modelled (write side: destination device congestion; read side:
+        # the source tier's read floor as the task's minimum duration).
+        if src_path and dst_path:
+            return copy_fsync(src_path, dst_path)
+        return data
+    _move.__name__ = name
+    return io(task(returns=1)(_move))
+
+
+_drain_task = _make_mover("tier_drain")
+_prefetch_task = _make_mover("tier_prefetch")
 
 
 class IORuntime:
@@ -170,10 +238,19 @@ class IORuntime:
 
     # ------------------------------------------------------------- submission
     def submit(self, defn: TaskDef, args, kwargs, sim: SimSpec,
-               storage_bw=None):
+               storage_bw=None, storage_tier=None):
         with self.lock:
             inst = TaskInstance(defn, args, kwargs, sim=sim,
-                                storage_bw=storage_bw)
+                                storage_bw=storage_bw,
+                                storage_tier=storage_tier)
+            # reject unsatisfiable constraint/tier classes HERE, before the
+            # task enters the graph: the error surfaces at the call site and
+            # no half-registered state (unfinished counts, dependents) is
+            # left behind. (getattr: A/B scheduler_cls like the frozen seed
+            # predates submission-time validation)
+            validate = getattr(self.scheduler, "validate_submit", None)
+            if validate is not None:
+                validate(inst)
             inst.submit_time = self.backend.now()
             ready = self.graph.add(inst)
             if ready:
@@ -199,6 +276,63 @@ class IORuntime:
             if newly_ready:
                 self.scheduler.make_ready_many(newly_ready)
 
+    # ----------------------------------------------------- tier data movement
+    def drain(self, data, to_tier: str, from_tier: Optional[str] = None,
+              io_mb: float = 0.0, storage_bw=None,
+              path: Optional[str] = None) -> Future:
+        """Asynchronously write ``data`` back to a slower tier (e.g. burst
+        buffer → shared FS). Returns a Future; the movement is an ordinary
+        I/O task that overlaps with compute. ``data`` may be a Future (the
+        drain then depends on its producer). ``path`` names a file to copy
+        between ``RealBackend.tier_dirs`` directories; ``storage_bw``
+        optionally throttles the writer (static MB/s or "auto")."""
+        return self._move(_drain_task, data, to_tier, from_tier, io_mb,
+                          storage_bw, path)
+
+    def prefetch(self, data, to_tier: str, from_tier: Optional[str] = None,
+                 io_mb: float = 0.0, storage_bw=None,
+                 path: Optional[str] = None) -> Future:
+        """Asynchronously stage ``data`` up to a faster tier (e.g. shared
+        FS → node-local SSD) ahead of the tasks that will read it."""
+        return self._move(_prefetch_task, data, to_tier, from_tier, io_mb,
+                          storage_bw, path)
+
+    def _move(self, mover: TaskFunction, data, to_tier, from_tier, io_mb,
+              storage_bw, path) -> Future:
+        # read-side floor: a single reader streams at most at the source
+        # device's bandwidth (the write side is modelled/performed on the
+        # destination tier the task is placed on)
+        src = None
+        if from_tier is not None:
+            src = self.cluster.tier_spec(from_tier)
+        elif self.cluster.workers:
+            src = self.cluster.workers[0].storage  # default: fastest tier
+        dur = read_floor_time(src, io_mb) if src is not None else 0.0
+        src_path = dst_path = None
+        if path is not None:
+            tp = getattr(self.backend, "tier_path", None)
+            if tp is not None:
+                # a backend that moves real files must be able to resolve
+                # both ends — a silent no-op copy would report a drain as
+                # durable without having moved anything
+                if from_tier is None:
+                    raise ValueError(
+                        "path= movement needs from_tier= to locate the "
+                        "source file")
+                src_path = tp(from_tier, path)
+                dst_path = tp(to_tier, path)
+                if src_path is None or dst_path is None:
+                    missing = from_tier if src_path is None else to_tier
+                    raise ValueError(
+                        f"no tier_dirs directory mapped for tier "
+                        f"{missing!r} (have: "
+                        f"{sorted(self.backend.tier_dirs)})")
+        # pin to the destination tier only when the cluster models it; on a
+        # plain single-tier cluster the move still runs, tier-agnostically
+        tier_hint = to_tier if self.cluster.has_tier(to_tier) else None
+        return mover(data, src_path, dst_path, io_mb=io_mb, duration=dur,
+                     storage_bw=storage_bw, storage_tier=tier_hint)
+
     # ------------------------------------------------------------------ waits
     def barrier(self, final: bool = False) -> None:
         if final:
@@ -222,6 +356,11 @@ class IORuntime:
             "avg_io_task_time": (sum(t.duration for t in io_tasks) / len(io_tasks))
             if io_tasks else 0.0,
             "tuners": {s: t.summary() for s, t in self.scheduler.tuners.items()},
+            # per-tier occupancy: one entry per distinct device in the
+            # hierarchy (shared tiers appear once)
+            "devices": {d.name: {"tier": d.tier,
+                                 "bytes_written": d.bytes_written}
+                        for d in self.cluster.devices},
         }
         be = self.backend
         if isinstance(be, SimBackend):

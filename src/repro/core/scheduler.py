@@ -11,15 +11,29 @@ While a tuner is learning, its tasks run only on a dedicated
 (paper §4.2.3B). Once learning finishes the node is released and the
 objective function picks the constraint, re-evaluated on every arrival.
 
+Tier-aware placement (multi-tier storage hierarchy): every worker carries an
+ordered list of storage tiers (resources.py). An I/O task with no tier hint
+is placed on the *fastest tier with budget*: the scheduler tries tier 0 on
+every candidate worker, then tier 1, and so on down the hierarchy, so a
+saturated node-local SSD spills to the burst buffer and then to the shared
+FS instead of queueing. A tier hint (``@constraint(tier=...)`` or per-call
+``storage_tier=``) pins the task to that tier's devices. Auto-constrained
+tasks get one :class:`AutoTuner` per (signature, tier) — the optimal
+constraint is a property of the device the tasks actually write to — keyed
+``sig`` for the default tier and ``"sig@tier"`` for hinted ones.
+
 Hot-path design (100k-task workloads): ready tasks are kept in per
-*placement-class* FIFO deques — one class per (compute-units), (static-bw)
-or (auto signature) — because two ready tasks of the same class have
-identical placement requirements: if the head of a class cannot be placed,
-no other member can either, so a pass attempts at most one task per class
-instead of rescanning the whole ready list. A heap over class heads keeps
-the global attempt order identical to the seed's submission-order scan, and
-a dirty flag skips passes entirely unless a resource was freed, a tuner
-epoch advanced, or a new task became ready.
+*placement-class* FIFO deques — one class per (compute-units), (static-bw,
+tier) or (auto signature, tier) — because two ready tasks of the same class
+have identical placement requirements: if the head of a class cannot be
+placed, no other member can either, so a pass attempts at most one task per
+class instead of rescanning the whole ready list. A heap over class heads
+keeps the global attempt order identical to the seed's submission-order
+scan, and a dirty flag skips passes entirely unless a resource was freed, a
+tuner epoch advanced, or a new task became ready. Unsatisfiable static
+constraints (a storageBW no device can ever grant, or a tier hint naming a
+tier no worker has) are rejected once per placement class at submission
+time instead of being rescanned on every failed placement attempt.
 """
 from __future__ import annotations
 
@@ -50,43 +64,77 @@ class Scheduler:
         self._ready_seq = itertools.count()    # global readiness order
         self._dirty = True                     # wake-up flag: anything changed
         #                                        since the last zero-progress pass?
+        self._validated: set[tuple] = set()    # class keys proven satisfiable
+        self._tier_depth = max((len(w.tiers) for w in cluster.workers),
+                               default=1)
         self.running: set[int] = set()
+        # tuners/learning_nodes are keyed per (signature, tier): plain ``sig``
+        # for the default tier (seed-compatible), ``"sig@tier"`` for hints
         self.tuners: dict[str, AutoTuner] = {}
         self.learning_nodes: dict[str, WorkerNode] = {}
+        # the *device* a tuner calibrates must be quiet too: on shared tiers
+        # (burst buffer / FS) node-level isolation alone would let other
+        # workers' traffic pollute the epoch measurements (paper §4.2.3B)
+        self.learning_devices: dict[str, object] = {}   # key -> StorageDevice
+        self._learning_dev_ids: set[int] = set()
         self.completed: list[TaskInstance] = []
         self.launch_log: list[tuple[float, str, str]] = []  # (tid, sig, worker)
 
     # ------------------------------------------------------------------ utils
+    @staticmethod
+    def _tuner_key(sig: str, tier: Optional[str]) -> str:
+        return sig if tier is None else f"{sig}@{tier}"
+
+    @staticmethod
+    def _tier_on(w: WorkerNode, tier: Optional[str]):
+        """The device ``tier`` resolves to on worker ``w``: the fastest
+        (primary) device when no hint is given, else the named tier or None
+        when the worker doesn't reach it."""
+        return w.storage if tier is None else w.tier_device(tier)
+
     def tuner_for(self, task: TaskInstance,
                   node: Optional[WorkerNode] = None) -> AutoTuner:
-        sig = task.defn.signature
-        if sig not in self.tuners:
+        tier = task.tier
+        key = self._tuner_key(task.defn.signature, tier)
+        if key not in self.tuners:
             spec = task.storage_bw
             assert isinstance(spec, AutoSpec)
-            # the device model the tuner reasons about: the device of the
-            # active-learning node its epochs actually run on (falls back to
-            # the first worker when called before a node is acquired).
+            # the device model the tuner reasons about: the tier device of
+            # the active-learning node its epochs actually run on (falls back
+            # to the first worker when called before a node is acquired).
             w = node if node is not None else self.cluster.workers[0]
-            self.tuners[sig] = AutoTuner(
-                sig, spec, device_bw=w.storage.bandwidth,
+            dev = self._tier_on(w, tier) or w.storage
+            self.tuners[key] = AutoTuner(
+                key, spec, device_bw=dev.bandwidth,
                 io_executors=w.io_executors)
-        return self.tuners[sig]
+        return self.tuners[key]
 
-    def _acquire_learning_node(self, sig: str) -> Optional[WorkerNode]:
-        node = self.learning_nodes.get(sig)
+    def _acquire_learning_node(self, key: str,
+                               tier: Optional[str] = None
+                               ) -> Optional[WorkerNode]:
+        node = self.learning_nodes.get(key)
         if node is not None:
             return node
         for w in self.cluster.workers:
-            if w.learning_owner is None:
-                w.learning_owner = sig
-                self.learning_nodes[sig] = w
-                return w
+            if w.learning_owner is not None:
+                continue
+            dev = self._tier_on(w, tier)
+            if dev is None or id(dev) in self._learning_dev_ids:
+                continue  # tier absent, or another tuner calibrates there
+            w.learning_owner = key
+            self.learning_nodes[key] = w
+            self.learning_devices[key] = dev
+            self._learning_dev_ids.add(id(dev))
+            return w
         return None  # all nodes busy learning other signatures: wait
 
-    def _release_learning_node(self, sig: str) -> None:
-        node = self.learning_nodes.pop(sig, None)
+    def _release_learning_node(self, key: str) -> None:
+        node = self.learning_nodes.pop(key, None)
         if node is not None:
             node.learning_owner = None
+            dev = self.learning_devices.pop(key, None)
+            if dev is not None:
+                self._learning_dev_ids.discard(id(dev))
             self._dirty = True
 
     def n_ready_of(self, sig: str) -> int:
@@ -113,9 +161,54 @@ class Scheduler:
             return ("C", d.computing_units)
         spec = task.storage_bw
         if is_auto(spec):
-            return ("A", d.signature)
+            return ("A", d.signature, task.tier)
         bw = spec.value if isinstance(spec, StaticSpec) else 0.0
-        return ("S", bw)
+        return ("S", bw, task.tier)
+
+    def validate_submit(self, task: TaskInstance) -> None:
+        """Called by the runtime *before* the task enters the graph, so an
+        unsatisfiable class raises at the submission call site with no
+        half-registered state left behind (and never from a completion
+        fan-out on a backend worker thread)."""
+        self._validate_class(self._class_key(task))
+
+    def _validate_class(self, key: tuple) -> None:
+        """Once-per-class satisfiability check (at submission time): a static
+        storageBW no eligible device can ever grant, or a tier hint naming a
+        tier no worker reaches, would otherwise fail every placement attempt
+        forever — the seed rescanned all workers on *each* attempt instead.
+        Only satisfiable keys are cached: a rejected class is re-diagnosed
+        (same precise error) if the caller retries it."""
+        if key in self._validated:
+            return
+        if key[0] == "C":
+            self._validated.add(key)
+            return
+        tier = key[2]
+        if tier is not None and not any(
+                w.tier_device(tier) is not None for w in self.cluster.workers):
+            raise SchedulerError(
+                f"storage tier {tier!r} is not present on any worker "
+                f"(available: {self.cluster.tier_names()})")
+        if key[0] == "S" and key[1] > 0:
+            bw = key[1]
+            devs = [d for w in self.cluster.workers
+                    for d in ([self._tier_on(w, tier)] if tier is not None
+                              else w.tiers) if d is not None]
+            if all(d.bandwidth < bw for d in devs):
+                raise SchedulerError(
+                    f"storageBW={bw} exceeds every device's bandwidth"
+                    + (f" on tier {tier!r}" if tier is not None else ""))
+        self._validated.add(key)
+
+    def _sig_key(self, task: TaskInstance) -> str:
+        """Backlog-count key: auto I/O tasks count per (signature, tier) —
+        the backlog feeds that tier's tuner objective — others per
+        signature."""
+        if task.defn.task_type != TaskType.COMPUTE and \
+                is_auto(task.storage_bw):
+            return self._tuner_key(task.defn.signature, task.tier)
+        return task.defn.signature
 
     # -------------------------------------------------------------- submission
     def make_ready(self, task: TaskInstance) -> None:
@@ -126,7 +219,7 @@ class Scheduler:
             q = self._ready_q[key] = deque()
         q.append(task)
         self._ready_count += 1
-        sig = task.defn.signature
+        sig = self._sig_key(task)
         self._sig_ready[sig] = self._sig_ready.get(sig, 0) + 1
         self._dirty = True
 
@@ -171,7 +264,7 @@ class Scheduler:
             if self._try_place(task):
                 q.popleft()
                 self._ready_count -= 1
-                sig = task.defn.signature
+                sig = self._sig_key(task)
                 self._sig_ready[sig] -= 1
                 if not self._sig_ready[sig]:
                     del self._sig_ready[sig]
@@ -205,56 +298,81 @@ class Scheduler:
         if is_auto(spec):
             return self._place_auto_io(task)
         bw = spec.value if isinstance(spec, StaticSpec) else 0.0
-        # sanity: an unsatisfiable static constraint is a config error
-        if bw > 0 and all(w.storage.bandwidth < bw for w in self.cluster.workers):
-            raise SchedulerError(
-                f"storageBW={bw} exceeds every device's bandwidth")
-        for w in self._io_candidates(task):
-            if w.learning_owner is not None:
-                continue  # active-learning node: keep it isolated
-            if w.free_io_executors <= 0:
-                continue
-            if bw > 0 and not w.storage.can_allocate(bw):
-                continue
-            w.free_io_executors -= 1
-            if bw >= 0:
-                w.storage.allocate(bw)
-            self._start(task, w, bw=bw)
-            return True
+        # (unsatisfiable constraints were rejected per-class at submission)
+        tier = task.tier
+        candidates = self._io_candidates(task)
+        if tier is not None:
+            # pinned: only devices backing the named tier qualify
+            for w in candidates:
+                dev = w.tier_device(tier)
+                if dev is not None and self._grant_io(task, w, dev, bw):
+                    return True
+            return False
+        # tier-agnostic: fastest tier with budget wins — try every worker's
+        # tier 0, then every worker's tier 1, ... (fall down the hierarchy)
+        for ti in range(self._tier_depth):
+            for w in candidates:
+                if ti >= len(w.tiers):
+                    continue
+                if self._grant_io(task, w, w.tiers[ti], bw):
+                    return True
         return False
+
+    def _grant_io(self, task: TaskInstance, w: WorkerNode, dev,
+                  bw: float) -> bool:
+        if w.learning_owner is not None:
+            return False  # active-learning node: keep it isolated
+        if id(dev) in self._learning_dev_ids:
+            return False  # device under calibration (shared-tier isolation)
+        if w.free_io_executors <= 0:
+            return False
+        if bw > 0 and not dev.can_allocate(bw):
+            return False
+        w.free_io_executors -= 1
+        if bw >= 0:
+            dev.allocate(bw)
+        self._start(task, w, bw=bw, device=dev)
+        return True
 
     def _place_auto_io(self, task: TaskInstance) -> bool:
         sig = task.defn.signature
-        tuner = self.tuners.get(sig)
+        tier = task.tier
+        key = self._tuner_key(sig, tier)
+        tuner = self.tuners.get(key)
         if tuner is None or tuner.learning():
-            node = self._acquire_learning_node(sig)
+            node = self._acquire_learning_node(key, tier)
             if node is None:
                 return False
+            dev = self._tier_on(node, tier)
             if tuner is None:
                 # the tuner models the device it actually learns on
                 tuner = self.tuner_for(task, node)
             c = tuner.current_constraint()
-            if node.free_io_executors <= 0 or not node.storage.can_allocate(c):
+            if node.free_io_executors <= 0 or not dev.can_allocate(c):
                 return False
             if not tuner.admit():
                 return False  # current epoch full; wait for the next one
             node.free_io_executors -= 1
-            node.storage.allocate(c)
+            dev.allocate(c)
             task.epoch = tuner.epoch
-            self._start(task, node, bw=c)
+            self._start(task, node, bw=c, device=dev)
             return True
         # learning done: objective fn, re-evaluated for the current backlog
-        n = self.n_ready_of(sig)
+        # of THIS (signature, tier) — not siblings targeting other tiers
+        n = self.n_ready_of(key)
         c = tuner.peek_choice(max(1, n))
         for w in self._io_candidates(task):
             if w.learning_owner is not None:
                 continue
-            if w.free_io_executors <= 0 or not w.storage.can_allocate(c):
+            dev = self._tier_on(w, tier)
+            if dev is None or id(dev) in self._learning_dev_ids:
+                continue
+            if w.free_io_executors <= 0 or not dev.can_allocate(c):
                 continue
             w.free_io_executors -= 1
-            w.storage.allocate(c)
+            dev.allocate(c)
             tuner.record_choice(c)
-            self._start(task, w, bw=c)
+            self._start(task, w, bw=c, device=dev)
             return True
         return False
 
@@ -263,15 +381,20 @@ class Scheduler:
         # otherwise honour data locality (inputs' producing workers first).
         if self.cluster.shared_workdir:
             return self.cluster.workers
-        pref = []
+        pref, pref_ids = [], set()
         for a in list(task.args) + list(task.kwargs.values()):
             if isinstance(a, Future) and a.task.worker is not None:
-                pref.append(a.task.worker)
-        rest = [w for w in self.cluster.workers if w not in pref]
+                w = a.task.worker
+                if id(w) not in pref_ids:  # O(1) membership (seed: list `in`)
+                    pref_ids.add(id(w))
+                    pref.append(w)
+        rest = [w for w in self.cluster.workers if id(w) not in pref_ids]
         return pref + rest
 
-    def _start(self, task: TaskInstance, worker: WorkerNode, bw: float) -> None:
+    def _start(self, task: TaskInstance, worker: WorkerNode, bw: float,
+               device=None) -> None:
         task.worker = worker
+        task.device = device
         task.granted_bw = bw
         task.state = TaskState.RUNNING
         self.running.add(task.tid)
@@ -288,24 +411,25 @@ class Scheduler:
             w.free_cpus += task.defn.computing_units
         else:
             w.free_io_executors += 1
-            w.storage.release(task.granted_bw)
+            (task.device or w.storage).release(task.granted_bw)
         if task.epoch is not None:
-            tuner = self.tuners[task.defn.signature]
+            key = self._tuner_key(task.defn.signature, task.tier)
+            tuner = self.tuners[key]
             tuner.on_task_complete(task.duration)
             if not tuner.learning():
-                self._release_learning_node(task.defn.signature)
+                self._release_learning_node(key)
         self.completed.append(task)
         self._dirty = True  # a resource was freed (and maybe an epoch advanced)
 
     def end_of_stream(self) -> None:
         """Signal that no more tasks will be submitted (final barrier):
         lets partially-filled learning epochs conclude."""
-        for sig, tuner in self.tuners.items():
+        for key, tuner in self.tuners.items():
             if tuner.learning():
                 tuner.end_of_stream()
                 self._dirty = True
                 if not tuner.learning():
-                    self._release_learning_node(sig)
+                    self._release_learning_node(key)
 
     # ---------------------------------------------------------------- sanity
     def assert_not_stuck(self) -> None:

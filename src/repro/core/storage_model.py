@@ -46,3 +46,26 @@ def expected_task_time(device: StorageDevice, k: int, io_mb: float) -> float:
 def max_concurrent_tasks(device_bw: float, constraint: float) -> int:
     """maxNumTasks_c (paper §3.3.2): floor(device bandwidth / constraint)."""
     return max(1, int(device_bw // constraint))
+
+
+# --------------------------------------------------------------------------
+# Cross-tier transfers (multi-tier hierarchy: SSD -> burst buffer -> FS)
+# --------------------------------------------------------------------------
+def read_floor_time(src: StorageDevice, mb: float) -> float:
+    """Lower bound on reading ``mb`` from ``src``: a single sequential
+    reader streams at most at the device bandwidth. Used as the ``min_end``
+    floor of runtime-generated drain/prefetch tasks — the *write* side is
+    what the simulator models dynamically (the task is placed on the
+    destination tier, so it sees that device's congestion)."""
+    if mb <= 0:
+        return 0.0
+    return mb / src.bandwidth if src.bandwidth > 0 else float("inf")
+
+
+def cross_tier_time(src: StorageDevice, dst: StorageDevice, mb: float,
+                    k: int = 1) -> float:
+    """Analytic estimate of moving ``mb`` from ``src`` to ``dst`` as one of
+    ``k`` concurrent movers: the slower of the source read floor and the
+    destination fair-share write time. The simulator reproduces this shape
+    dynamically; this closed form serves sizing/benchmark analysis."""
+    return max(read_floor_time(src, mb), expected_task_time(dst, k, mb))

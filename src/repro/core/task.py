@@ -50,6 +50,7 @@ class TaskDef:
     task_type: TaskType = TaskType.COMPUTE
     computing_units: int = 1
     storage_bw: Optional[ConstraintSpec] = None
+    storage_tier: Optional[str] = None  # tier hint (None: fastest-with-budget)
     param_dirs: dict = field(default_factory=dict)  # name -> Direction
     returns: int = 0
     max_retries: int = 0  # I/O fault tolerance: bounded retries
@@ -112,6 +113,9 @@ class SimSpec:
 
     duration: float = 0.0        # compute time, seconds (virtual)
     io_bytes: float = 0.0        # MB to write/read for I/O tasks
+    fail: bool = False           # fault injection: the task FAILs at its
+    #                              (normally computed) end time, exercising
+    #                              descendant cancellation in the simulator
 
 
 class TaskInstance:
@@ -119,7 +123,8 @@ class TaskInstance:
 
     def __init__(self, defn: TaskDef, args: tuple, kwargs: dict,
                  sim: SimSpec | None = None,
-                 storage_bw: Optional[ConstraintSpec] = None):
+                 storage_bw: Optional[ConstraintSpec] = None,
+                 storage_tier: Optional[str] = None):
         self.tid = next(TaskInstance._ids)
         self.defn = defn
         self.args = args
@@ -127,6 +132,9 @@ class TaskInstance:
         self.sim = sim or SimSpec()
         # per-instance constraint override (else defn.storage_bw)
         self.storage_bw = storage_bw if storage_bw is not None else defn.storage_bw
+        # resolved tier hint: per-call override, else the @constraint hint,
+        # else None = tier-agnostic (fastest tier with budget wins)
+        self.tier = storage_tier if storage_tier is not None else defn.storage_tier
         self.state = TaskState.PENDING
         self.deps: set[int] = set()          # tids this task waits on
         self.anti_deps: set[int] = set()     # subset of deps that are
@@ -136,6 +144,8 @@ class TaskInstance:
         self.futures = [Future(self, i) for i in range(max(defn.returns, 1))]
         # filled by the scheduler/backend
         self.worker = None
+        self.device = None                   # StorageDevice the I/O was
+        #                                      granted on (a tier of .worker)
         self.granted_bw: float = 0.0         # bandwidth reserved at launch
         self.submit_time: float = 0.0
         self.start_time: float = 0.0

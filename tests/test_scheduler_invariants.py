@@ -254,6 +254,101 @@ def test_failure_does_not_cancel_anti_dependents():
     assert rt.graph.unfinished == 0
 
 
+# ------------------------- satellite: end_of_stream / assert_not_stuck edges
+def test_partially_filled_epoch_concludes_at_final_barrier():
+    """Fewer auto tasks than the first epoch's target_k: the final barrier's
+    end_of_stream must close admission, register the partial measurement and
+    finish the phase — no task may hang waiting for arrivals."""
+    cluster = small_cluster(n_workers=2, io_executors=32, device_bw=128)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def ck(i):
+            pass
+        # first epoch: c = 128/32 = 4, target_k = 32 -> 3 tasks can't fill it
+        for i in range(3):
+            ck(i, io_mb=10)
+        rt.barrier(final=True)
+        tuner = rt.scheduler.tuners["ck"]
+    assert not tuner.learning()
+    assert len(rt.scheduler.completed) == 3
+    assert tuner.registry, "the partial epoch must still register"
+    assert all(t.epoch is not None for t in rt.scheduler.completed)
+    # the learning node was released at conclusion
+    assert all(w.learning_owner is None for w in cluster.workers)
+
+
+def test_auto_waits_while_all_nodes_learn_other_signatures():
+    """Every node is an active-learning node for some other signature and a
+    third auto signature has ready tasks: nothing is running, so the drain
+    loop goes through assert_not_stuck's legitimate-transient path —
+    end_of_stream concludes the stalled epochs, frees their nodes, and the
+    waiting signature must then run to completion (no SchedulerError)."""
+    cluster = small_cluster(n_workers=2, io_executors=16, device_bw=64)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def sig_a(i):
+            pass
+
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def sig_b(i):
+            pass
+
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def sig_c(i):
+            pass
+        # one task each for a and b: each acquires one of the two nodes and
+        # leaves its first epoch waiting for more arrivals forever
+        sig_a(0, io_mb=8)
+        sig_b(0, io_mb=8)
+        # c's backlog can only run after a node frees up
+        for i in range(4):
+            sig_c(i, io_mb=8)
+        rt.barrier(final=True)
+        done = {t.defn.name for t in rt.scheduler.completed}
+        counts = {}
+        for t in rt.scheduler.completed:
+            counts[t.defn.name] = counts.get(t.defn.name, 0) + 1
+    assert done == {"sig_a", "sig_b", "sig_c"}
+    assert counts["sig_c"] == 4
+    assert all(w.learning_owner is None for w in cluster.workers)
+    assert rt.graph.unfinished == 0
+
+
+def test_static_io_blocked_by_learning_node_resolves_not_raises():
+    """A static I/O task whose only possible node is busy learning: once the
+    epoch task completes and nothing is running, the drain loop hits
+    assert_not_stuck's legitimate transient — it must resolve it (conclude
+    the epoch, free the node, place the static task), not raise."""
+    cluster = small_cluster(n_workers=1, io_executors=8, device_bw=64)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def ck(i):
+            pass
+        ck(0, io_mb=4)
+
+        @io
+        @task()
+        def plain(i):
+            pass
+        plain(0, io_mb=4)  # blocked: the only node is a learning node
+        sched = rt.scheduler
+        sched.schedule_pass()
+        assert sched.n_ready == 1 and not any(
+            t for t in sched.ready if t.defn.name == "ck")
+        rt.barrier(final=True)
+    assert len(rt.scheduler.completed) == 2
+
+
 # ------------------------------------------------ satellite: reserved kwargs
 def test_reserved_kwarg_rejected_at_decoration_time():
     with pytest.raises(TypeError, match="reserved parameter"):

@@ -1,0 +1,309 @@
+"""Multi-tier storage hierarchy: structure, tier-aware placement, spill,
+per-(signature, tier) autotuners, drain/prefetch movement, submission-time
+constraint validation (ISSUE 2 tentpole)."""
+import pytest
+
+from repro.core import (Cluster, IORuntime, RealBackend, SchedulerError,
+                        SimBackend, StorageDevice, WorkerNode, constraint,
+                        cross_tier_time, io, read_floor_time, task)
+
+
+def tiered_cluster(**kw):
+    kw.setdefault("n_workers", 2)
+    kw.setdefault("cpus", 4)
+    kw.setdefault("io_executors", 8)
+    kw.setdefault("ssd_bw", 200.0)
+    kw.setdefault("bb_bw", 400.0)
+    kw.setdefault("fs_bw", 100.0)
+    return Cluster.make_tiered(**kw)
+
+
+# ---------------------------------------------------------------- structure
+def test_make_tiered_structure():
+    c = tiered_cluster(n_workers=3)
+    assert c.tier_names() == ["ssd", "bb", "fs"]
+    # ssd per worker; bb and fs shared single instances
+    assert len(c.devices) == 3 + 2
+    bbs = {id(w.tier_device("bb")) for w in c.workers}
+    fss = {id(w.tier_device("fs")) for w in c.workers}
+    assert len(bbs) == 1 and len(fss) == 1
+    # storage stays the fastest-tier alias (seed compatibility)
+    for w in c.workers:
+        assert w.storage is w.tiers[0] and w.storage.tier == "ssd"
+    assert c.has_tier("bb") and not c.has_tier("tape")
+    assert c.tier_spec("fs").name == "shared-fs"
+
+
+def test_single_tier_worker_unchanged():
+    w = WorkerNode(name="w", cpus=2, io_executors=4)
+    assert w.tiers == [w.storage]
+    with pytest.raises(ValueError):
+        WorkerNode(name="x", storage=StorageDevice(name="a"),
+                   tiers=[StorageDevice(name="b")])
+
+
+def test_cross_tier_time_helpers():
+    src = StorageDevice(name="s", bandwidth=100.0)
+    dst = StorageDevice(name="d", bandwidth=50.0, per_stream_cap=10.0)
+    assert read_floor_time(src, 200.0) == 2.0
+    # write side dominates: one stream at 10 MB/s -> 20s
+    assert cross_tier_time(src, dst, 200.0, k=1) == 20.0
+
+
+# ---------------------------------------------------------------- placement
+def test_tier_hint_pins_placement():
+    cluster = tiered_cluster()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=20, tier="bb")
+        @io
+        @task()
+        def to_bb(i):
+            pass
+
+        @constraint(storageBW=20)
+        @io
+        @task()
+        def anywhere(i):
+            pass
+        for i in range(4):
+            to_bb(i, io_mb=10)
+            anywhere(i, io_mb=10)
+        rt.barrier(final=True)
+        done = rt.scheduler.completed
+    assert all(t.device.tier == "bb" for t in done if t.defn.name == "to_bb")
+    # tier-agnostic tasks take the fastest tier with budget: the ssd
+    assert all(t.device.tier == "ssd" for t in done
+               if t.defn.name == "anywhere")
+
+
+def test_call_time_tier_override_beats_decorator():
+    cluster = tiered_cluster()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=20, tier="bb")
+        @io
+        @task()
+        def wr(i):
+            pass
+        wr(0, io_mb=5)
+        wr(1, io_mb=5, storage_tier="fs")
+        rt.barrier(final=True)
+        tiers = {t.args[0]: t.device.tier for t in rt.scheduler.completed}
+    assert tiers[0] == "bb" and tiers[1] == "fs"
+
+
+def test_saturated_fast_tier_spills_down_hierarchy():
+    # ssd budget holds 2 x 100; the rest of the burst must spill to bb
+    # (400 -> 4 more) and then fs (100 -> 1) instead of queueing
+    cluster = tiered_cluster(n_workers=1, ssd_bw=200.0, bb_bw=400.0,
+                             fs_bw=100.0, io_executors=16)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=100)
+        @io
+        @task()
+        def wr(i):
+            pass
+        for i in range(7):
+            wr(i, io_mb=50)
+        rt.barrier(final=True)
+        done = rt.scheduler.completed
+    first_wave = sorted(t.device.tier for t in done
+                        if t.start_time == 0.0)
+    assert first_wave == ["bb", "bb", "bb", "bb", "fs", "ssd", "ssd"]
+
+
+def test_per_tier_autotuners():
+    cluster = tiered_cluster(n_workers=3)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def ck(i):
+            pass
+        for i in range(60):
+            ck(i, io_mb=20)                       # default tier (ssd)
+            ck(i, io_mb=20, storage_tier="fs")    # fs-pinned
+        rt.barrier(final=True)
+        tuners = rt.scheduler.tuners
+    assert set(tuners) == {"ck", "ck@fs"}
+    # each tuner models the device it learned on
+    assert tuners["ck"].device_bw == 200.0
+    assert tuners["ck@fs"].device_bw == 100.0
+    epoch_tiers = {t.device.tier for t in rt.scheduler.completed
+                   if t.epoch is not None}
+    assert epoch_tiers == {"ssd", "fs"}
+
+
+# ------------------------------------------- submission-time validation
+def test_unknown_tier_raises_at_submission():
+    cluster = tiered_cluster()
+    with pytest.raises(SchedulerError, match="tape"):
+        with IORuntime(cluster, backend=SimBackend()):
+            @io
+            @task()
+            def wr(i):
+                pass
+            wr(0, io_mb=1, storage_tier="tape")  # raises HERE, not at barrier
+
+
+def test_unsatisfiable_bw_on_tier_raises_even_if_other_tier_fits():
+    cluster = tiered_cluster()  # fs 100 < 150 < bb 400
+    with pytest.raises(SchedulerError, match="exceeds every device"):
+        with IORuntime(cluster, backend=SimBackend()):
+            @constraint(storageBW=150, tier="fs")
+            @io
+            @task()
+            def wr(i):
+                pass
+            wr(0, io_mb=1)
+    # a bw too big for ssd (200) and fs (100) is still satisfiable without
+    # a hint: the hierarchy walk grants it on the bb (400)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=250)
+        @io
+        @task()
+        def wr2(i):
+            pass
+        wr2(0, io_mb=1)
+        rt.barrier(final=True)
+        assert rt.scheduler.completed[0].device.tier == "bb"
+
+
+def test_unknown_tier_raises_even_when_not_immediately_ready():
+    """Validation happens at submission proper (before the task enters the
+    graph), so a doomed class with pending dependencies still raises at the
+    call site — never from a completion fan-out — and leaves no
+    half-registered state behind."""
+    cluster = tiered_cluster()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @task(returns=1)
+        def prod():
+            pass
+
+        @io
+        @task()
+        def wr(x):
+            pass
+        f = prod(duration=0.1)
+        with pytest.raises(SchedulerError, match="tape"):
+            wr(f, io_mb=1, storage_tier="tape")
+        # the same doomed class raises again on retry (not cached as ok)
+        with pytest.raises(SchedulerError, match="tape"):
+            wr(f, io_mb=1, storage_tier="tape")
+        rt.barrier(final=True)
+    assert rt.graph.unfinished == 0
+    assert len(rt.scheduler.completed) == 1  # only prod ever entered
+
+
+def test_shared_tier_learning_isolated_across_workers():
+    """While a tuner calibrates on a *shared* tier (burst buffer), traffic
+    from every worker must stay off that device — node-level isolation alone
+    would let w1 pollute the epoch measurements taken on w0."""
+    cluster = tiered_cluster(n_workers=3)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW="auto", tier="bb")
+        @io
+        @task()
+        def ck_bb(i):
+            pass
+
+        @constraint(storageBW=10, tier="bb")
+        @io
+        @task()
+        def wr_bb(i):
+            pass
+        for i in range(40):
+            ck_bb(i, io_mb=16)
+            wr_bb(i, io_mb=4)
+        rt.barrier(final=True)
+        done = rt.scheduler.completed
+    epochs = [t for t in done if t.epoch is not None]
+    assert epochs and all(t.device.tier == "bb" for t in epochs)
+    for t in done:
+        if t.defn.name != "wr_bb":
+            continue
+        for e in epochs:  # no static bb write may overlap any epoch task
+            assert t.start_time >= e.end_time - 1e-9 or \
+                t.end_time <= e.start_time + 1e-9, (t.tid, e.tid)
+
+
+# ------------------------------------------------------------ data movement
+def test_sim_drain_charges_destination_tier():
+    cluster = tiered_cluster()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=40)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=80)
+        rt.drain(f, to_tier="fs", from_tier="ssd", io_mb=80, storage_bw=25)
+        rt.prefetch(None, to_tier="bb", from_tier="fs", io_mb=16)
+        rt.barrier(final=True)
+        st = rt.stats()
+    by_tier = {}
+    for d in st["devices"].values():
+        by_tier[d["tier"]] = by_tier.get(d["tier"], 0.0) + d["bytes_written"]
+    assert by_tier["ssd"] == 80.0    # original write
+    assert by_tier["fs"] == 80.0     # drained copy
+    assert by_tier["bb"] == 16.0     # prefetch staged up
+    # the drain waited for its producer (read floor also lower-bounds it)
+    drains = [t for t in rt.scheduler.completed
+              if t.defn.name == "tier_drain"]
+    wrs = [t for t in rt.scheduler.completed if t.defn.name == "wr"]
+    assert drains[0].start_time >= wrs[0].end_time - 1e-9
+
+
+def test_wait_on_cancelled_descendant_returns_instead_of_hanging():
+    """sim_fail fault injection: waiting on a future downstream of the
+    failure must return (the cancelled task's future resolves to None), not
+    hang the drain with an unrelated error."""
+    from repro.core import TaskState
+    cluster = tiered_cluster()
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+
+        @task(returns=1)
+        def child(x):
+            pass
+        a = wr(0, io_mb=5, sim_fail=True)
+        b = child(a)
+        assert rt.wait_on(b) is None
+        states = {t.defn.name: t.state for t in rt.graph.tasks.values()}
+        assert states == {"wr": TaskState.FAILED, "child": TaskState.FAILED}
+        rt.barrier(final=True)
+    assert rt.graph.unfinished == 0
+
+
+def test_move_with_unmapped_tier_dir_raises(tmp_path):
+    ssd_dir = tmp_path / "ssd"
+    ssd_dir.mkdir()
+    (ssd_dir / "f.bin").write_bytes(b"data")
+    dev = StorageDevice(name="d", bandwidth=1000, per_stream_cap=500)
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                          storage=dev)])
+    backend = RealBackend(tier_dirs={"ssd": ssd_dir})  # no "fs" mapping
+    with IORuntime(cluster, backend=backend) as rt:
+        with pytest.raises(ValueError, match="fs"):
+            rt.drain(None, to_tier="fs", from_tier="ssd", path="f.bin")
+        with pytest.raises(ValueError, match="from_tier"):
+            rt.drain(None, to_tier="ssd", path="f.bin")
+
+
+def test_real_backend_drain_moves_file(tmp_path):
+    ssd_dir, fs_dir = tmp_path / "ssd", tmp_path / "fs"
+    ssd_dir.mkdir(), fs_dir.mkdir()
+    payload = b"x" * 4096
+    (ssd_dir / "blob.bin").write_bytes(payload)
+    dev = StorageDevice(name="d", bandwidth=1000, per_stream_cap=500)
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                          storage=dev)])
+    backend = RealBackend(tier_dirs={"ssd": ssd_dir, "fs": fs_dir})
+    with IORuntime(cluster, backend=backend) as rt:
+        fut = rt.drain(None, to_tier="fs", from_tier="ssd",
+                       io_mb=len(payload) / 1e6, path="blob.bin")
+        out = rt.wait_on(fut)
+    assert out == str(fs_dir / "blob.bin")
+    assert (fs_dir / "blob.bin").read_bytes() == payload
