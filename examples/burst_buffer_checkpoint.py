@@ -9,6 +9,13 @@ restarts never observe a half-drained checkpoint. ``RealBackend(tier_dirs=)``
 gives the runtime the tier→directory mapping used by ``rt.drain`` /
 ``rt.prefetch`` for ad-hoc file movement.
 
+Capacity-aware GC: the burst buffer is finite, so the manager trims it more
+aggressively than the durable copy — ``fast_keep`` (default
+``min(keep, 1)``) bounds how many steps' shards linger on the fast tier,
+while ``keep`` durable checkpoints survive on the shared FS. The run prints
+both directory listings at the end: the fast tier holds only the newest
+step, the shared FS the full retention window.
+
 Run:  PYTHONPATH=src python examples/burst_buffer_checkpoint.py
 """
 import tempfile
@@ -30,13 +37,16 @@ def main():
     root = Path(tempfile.mkdtemp(prefix="bb_ckpt_"))
     bb_dir, fs_dir = root / "burst_buffer", root / "shared_fs"
 
-    ssd = StorageDevice(name="local-ssd", bandwidth=2000, per_stream_cap=500)
+    ssd = StorageDevice(name="local-ssd", bandwidth=2000, per_stream_cap=500,
+                        capacity_gb=0.01)  # a deliberately tiny burst buffer
     fs = StorageDevice(name="pfs", bandwidth=400, per_stream_cap=80,
                        tier="fs")
     cluster = Cluster(workers=[WorkerNode(name="w0", cpus=4, io_executors=8,
                                           tiers=[ssd, fs])])
+    # keep 3 durable checkpoints on the shared FS but only the newest step's
+    # shards on the finite fast tier (fast_keep defaults to min(keep, 1))
     mgr = CheckpointManager(fs_dir, n_shards=4, fast_dir=bb_dir, drain_bw=80,
-                            overrun_policy="wait")
+                            overrun_policy="wait", keep=3)
 
     state = {"w": np.random.default_rng(0).normal(size=(256, 256)),
              "b": np.zeros(256)}
@@ -57,6 +67,11 @@ def main():
     drained = sorted(p.name for p in
                      (fs_dir / f"step_{step:08d}").glob("shard_*.bin"))
     print(f"durable shards on shared FS: {drained}")
+    durable_steps = sorted(d.name for d in fs_dir.glob("step_*"))
+    fast_steps = sorted(d.name for d in bb_dir.glob("step_*"))
+    print(f"durable checkpoints (keep={mgr.keep}): {durable_steps}")
+    print(f"fast-tier residue (fast_keep={mgr.fast_keep}): {fast_steps}")
+    assert len(fast_steps) <= mgr.fast_keep  # mgr.wait() trimmed the rest
 
 
 if __name__ == "__main__":

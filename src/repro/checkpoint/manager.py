@@ -68,11 +68,17 @@ class CheckpointManager:
     ``fast_dir`` enables burst-buffer mode: async saves write shards there
     first and drain them to ``directory`` in the background; ``drain_bw``
     optionally throttles each drain stream (static MB/s or "auto") so the
-    write-back doesn't congest the shared FS."""
+    write-back doesn't congest the shared FS.
+
+    Capacity-aware GC: the fast tier is finite (it's a burst buffer), so it
+    is trimmed more aggressively than the durable copy — ``fast_keep``
+    bounds how many steps' shards stay there (default ``min(keep, 1)``:
+    only the in-flight/most recent save, since every older step is already
+    durable on ``directory`` and restart never reads the fast tier)."""
 
     def __init__(self, directory, n_shards: int = 8,
                  overrun_policy: str = "skip", keep: int = 3,
-                 fast_dir=None, drain_bw=None):
+                 fast_dir=None, drain_bw=None, fast_keep=None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
@@ -82,6 +88,9 @@ class CheckpointManager:
         if self.fast_dir is not None:
             self.fast_dir.mkdir(parents=True, exist_ok=True)
         self.drain_bw = drain_bw
+        if fast_keep is not None and fast_keep < 0:
+            raise ValueError(f"fast_keep must be >= 0, got {fast_keep}")
+        self.fast_keep = min(keep, 1) if fast_keep is None else int(fast_keep)
         self._in_flight = None  # (step, commit future)
 
     # ------------------------------------------------------------------ save
@@ -149,6 +158,8 @@ class CheckpointManager:
         if self._in_flight is not None and rt is not None:
             rt.wait_on(self._in_flight[1])
             self._in_flight = None
+            # the last save just became durable: one final fast-tier trim
+            self._gc()
 
     # --------------------------------------------------------------- restore
     def steps(self) -> list[int]:
@@ -195,3 +206,28 @@ class CheckpointManager:
             if self.fast_dir is not None:
                 shutil.rmtree(self.fast_dir / f"step_{s:08d}",
                               ignore_errors=True)
+        if self.fast_dir is None:
+            return
+        # capacity-aware fast-tier GC: the burst buffer is finite, so it is
+        # trimmed to fast_keep steps — but only steps already durable on the
+        # shared directory (manifest committed), and never the in-flight
+        # save whose shards may still be draining
+        fast_steps = sorted(
+            int(d.name.split("_")[1]) for d in self.fast_dir.glob("step_*"))
+        durable = set(steps)
+        in_flight = self._in_flight[0] if self._in_flight else None
+        candidates = [s for s in fast_steps
+                      if s in durable and s != in_flight]
+        trim = candidates[:-self.fast_keep] if self.fast_keep else candidates
+        # a superseded step that never became durable is a failed save (its
+        # drains are dead; saves are serialized, so anything older than the
+        # newest dispatched step is final) — its shards would otherwise leak
+        # on the finite fast tier forever
+        newest = in_flight if in_flight is not None else \
+            (max(durable) if durable else None)
+        if newest is not None:
+            trim = trim + [s for s in fast_steps
+                           if s not in durable and s < newest]
+        for s in trim:
+            shutil.rmtree(self.fast_dir / f"step_{s:08d}",
+                          ignore_errors=True)

@@ -9,6 +9,8 @@ Public API (PyCOMPSs-flavoured, paper §4):
 """
 from .backends import RealBackend, SimBackend
 from .constraints import AutoSpec, StaticSpec, parse_storage_bw
+from .datalife import (DataCatalog, DataObject, EvictionPolicy,
+                       LifecycleConfig, LRUEviction, TierCapacity)
 from .resources import Cluster, StorageDevice, WorkerNode
 from .runtime import IORuntime, constraint, current_runtime, io, task, wait_on
 from .scheduler import SchedulerError
@@ -22,6 +24,8 @@ __all__ = [
     "SimBackend", "RealBackend", "Cluster", "WorkerNode", "StorageDevice",
     "AutoSpec", "StaticSpec", "parse_storage_bw", "SchedulerError",
     "IN", "INOUT", "OUT", "Direction", "DataHandle", "Future", "TaskState",
+    "DataCatalog", "DataObject", "EvictionPolicy", "LifecycleConfig",
+    "LRUEviction", "TierCapacity",
     "aggregate_throughput", "per_task_rate", "expected_task_time",
     "max_concurrent_tasks", "cross_tier_time", "read_floor_time",
 ]

@@ -132,13 +132,17 @@ class SimBackend(Backend):
     def launch(self, task: TaskInstance, worker) -> None:
         task.start_time = self.clock
         task._sim_seq = next(self._launch_seq)
+        # read_penalty: the data-lifecycle catalog's simulated cost of
+        # pulling tracked inputs from their fastest resident tier (0.0
+        # unless the lifecycle subsystem is active — grant-time snapshot)
+        dur = task.sim.duration + task.read_penalty
         if task.defn.task_type == TaskType.COMPUTE:
-            end = self.clock + max(task.sim.duration, _EPS)
+            end = self.clock + max(dur, _EPS)
             self._compute[task.tid] = (task, end)
             self._push_entry(task.tid, end)
         else:
             rem = max(task.sim.io_bytes, 0.0)
-            min_end = self.clock + max(task.sim.duration, _EPS)
+            min_end = self.clock + max(dur, _EPS)
             rec = [task, rem, min_end]
             self._io[task.tid] = rec
             # the device the scheduler granted (a tier of the worker); falls
@@ -257,6 +261,10 @@ class SimBackend(Backend):
             if not self._compute and not self._io:
                 # nothing running: either stalled learning epochs or done
                 if rt.scheduler.n_ready:
+                    # a capacity-blocked task may just need an eviction —
+                    # give the lifecycle a chance before declaring stuck
+                    if rt._lifecycle_tick():
+                        continue
                     rt.scheduler.assert_not_stuck()
                     continue
                 if predicate():
@@ -395,6 +403,8 @@ class RealBackend(Backend):
                 if predicate():
                     return
                 if not rt.scheduler.running and rt.scheduler.n_ready:
+                    if rt._lifecycle_tick():
+                        continue
                     rt.scheduler.assert_not_stuck()
                     continue
                 self._cv.wait(timeout=self._poll)

@@ -49,8 +49,19 @@ class StorageDevice:
     #                                 very high concurrency is superlinear
     congestion_knee: Optional[int] = None  # default: bandwidth/per_stream_cap
     tier: str = "ssd"               # tier label (targetable via tier= hints)
+    capacity_gb: Optional[float] = None  # finite capacity budget; None =
+    #                                      unlimited (the seed behaviour)
 
     def __post_init__(self):
+        if self.capacity_gb is not None and self.capacity_gb <= 0:
+            raise ValueError(
+                f"device {self.name}: capacity_gb must be positive "
+                f"(got {self.capacity_gb}); use capacity_gb=None for an "
+                f"unlimited tier")
+        if self.bandwidth <= 0:
+            raise ValueError(
+                f"device {self.name}: bandwidth must be positive "
+                f"(got {self.bandwidth})")
         if self.congestion_knee is None:
             self.congestion_knee = max(1, int(self.bandwidth / self.per_stream_cap))
         # --- dynamic accounting state ---
@@ -64,6 +75,11 @@ class StorageDevice:
         #                                  rate-RAISING change, i.e. the only
         #                                  one that can make cached finish-time
         #                                  lower bounds stale-late
+        # --- capacity occupancy state (symmetric to the bandwidth budget:
+        #     reserve-at-grant, commit-at-finish, free-at-eviction) ---
+        self.used_mb: float = 0.0        # committed resident bytes (MB)
+        self.reserved_mb: float = 0.0    # in-flight writer reservations (MB)
+        self.peak_occupancy_mb: float = 0.0  # high-water mark of used+reserved
 
     # -- budget accounting (scheduler-facing) --------------------------------
     def can_allocate(self, bw: float) -> bool:
@@ -85,12 +101,72 @@ class StorageDevice:
         if self.active_io < 0 or self.available_bw > self.bandwidth + 1e-6:
             raise RuntimeError(f"bandwidth accounting underflow on {self.name}")
 
+    # -- capacity occupancy (data lifecycle; see datalife.py) ----------------
+    @property
+    def capacity_mb(self) -> Optional[float]:
+        return None if self.capacity_gb is None else self.capacity_gb * 1024.0
+
+    @property
+    def occupancy_mb(self) -> float:
+        """Committed + in-flight-reserved occupancy (MB)."""
+        return self.used_mb + self.reserved_mb
+
+    def free_capacity_mb(self) -> float:
+        cap = self.capacity_mb
+        if cap is None:
+            return float("inf")
+        return cap - self.occupancy_mb
+
+    def can_reserve_capacity(self, mb: float) -> bool:
+        return mb <= self.free_capacity_mb() + 1e-9
+
+    def reserve_capacity(self, mb: float) -> None:
+        """Reserve-at-grant: an I/O task granted on this device claims its
+        output footprint up front so concurrent grants can't overcommit."""
+        if mb <= 0 or self.capacity_gb is None:
+            return
+        if not self.can_reserve_capacity(mb):
+            raise RuntimeError(
+                f"over-filling device {self.name}: want {mb} MB, have "
+                f"{self.free_capacity_mb():.1f} MB free of "
+                f"{self.capacity_mb:.0f}")
+        self.reserved_mb += mb
+        self.peak_occupancy_mb = max(self.peak_occupancy_mb, self.occupancy_mb)
+
+    def commit_capacity(self, mb: float) -> None:
+        """Commit-at-finish: the reservation becomes resident data."""
+        if mb <= 0 or self.capacity_gb is None:
+            return
+        self.reserved_mb -= mb
+        self.used_mb += mb
+        if self.reserved_mb < -1e-6:
+            raise RuntimeError(f"capacity reservation underflow on {self.name}")
+
+    def cancel_reservation(self, mb: float) -> None:
+        """A granted writer failed: its reservation never becomes resident."""
+        if mb <= 0 or self.capacity_gb is None:
+            return
+        self.reserved_mb -= mb
+        if self.reserved_mb < -1e-6:
+            raise RuntimeError(f"capacity reservation underflow on {self.name}")
+
+    def free_capacity(self, mb: float) -> None:
+        """Eviction/deletion: resident data leaves the device."""
+        if mb <= 0 or self.capacity_gb is None:
+            return
+        self.used_mb -= mb
+        if self.used_mb < -1e-6:
+            raise RuntimeError(f"capacity occupancy underflow on {self.name}")
+
     def reset(self):
         self.available_bw = self.bandwidth
         self.active_io = 0
         self.bytes_written = 0.0
         self.rate_epoch += 1
         self.release_epoch += 1
+        self.used_mb = 0.0
+        self.reserved_mb = 0.0
+        self.peak_occupancy_mb = 0.0
 
 
 @dataclass
@@ -181,7 +257,10 @@ class Cluster:
                     ssd_bw: float = 450.0, ssd_stream_cap: float = 8.0,
                     bb_bw: float = 1600.0, bb_stream_cap: float = 40.0,
                     fs_bw: float = 300.0, fs_stream_cap: float = 4.0,
-                    congestion_alpha: float = 0.004) -> "Cluster":
+                    congestion_alpha: float = 0.004,
+                    ssd_capacity_gb: Optional[float] = None,
+                    bb_capacity_gb: Optional[float] = None,
+                    fs_capacity_gb: Optional[float] = None) -> "Cluster":
         """Three-tier hierarchy: node-local SSD → shared burst buffer →
         shared parallel FS.
 
@@ -191,18 +270,26 @@ class Cluster:
         Defaults sketch a DataWarp-like burst buffer (high aggregate
         bandwidth, generous per-stream rate) over a congested parallel FS
         (modest aggregate bandwidth shared by everyone).
+
+        ``*_capacity_gb`` gives the tier a finite capacity budget (per
+        device: each worker SSD individually, the shared bb/fs globally);
+        None keeps the tier unlimited — the data lifecycle subsystem
+        (datalife.py) activates whenever any tier is finite.
         """
         bb = StorageDevice(name="burst-buffer", bandwidth=bb_bw,
                            per_stream_cap=bb_stream_cap,
-                           congestion_alpha=congestion_alpha, tier="bb")
+                           congestion_alpha=congestion_alpha, tier="bb",
+                           capacity_gb=bb_capacity_gb)
         fs = StorageDevice(name="shared-fs", bandwidth=fs_bw,
                            per_stream_cap=fs_stream_cap,
-                           congestion_alpha=congestion_alpha, tier="fs")
+                           congestion_alpha=congestion_alpha, tier="fs",
+                           capacity_gb=fs_capacity_gb)
         workers = []
         for i in range(n_workers):
             ssd = StorageDevice(name=f"w{i}-ssd", bandwidth=ssd_bw,
                                 per_stream_cap=ssd_stream_cap,
-                                congestion_alpha=congestion_alpha, tier="ssd")
+                                congestion_alpha=congestion_alpha, tier="ssd",
+                                capacity_gb=ssd_capacity_gb)
             workers.append(WorkerNode(
                 name=f"w{i}", cpus=cpus, io_executors=io_executors,
                 tiers=[ssd, bb, fs]))

@@ -50,12 +50,13 @@ from typing import Optional
 
 from .backends import Backend, RealBackend, SimBackend
 from .constraints import parse_storage_bw
+from .datalife import DataCatalog, LifecycleConfig
 from .graph import TaskGraph, _param_names
 from .resources import Cluster
 from .scheduler import Scheduler
 from .storage_model import read_floor_time
 from .task import (Direction, Future, SimSpec, TaskDef, TaskInstance,
-                   TaskState, TaskType)
+                   TaskState, TaskType, resolved_future)
 
 _current: threading.local = threading.local()
 
@@ -90,8 +91,17 @@ class TaskFunction:
         rt = current_runtime()
         # strip exactly the names validated at decoration time
         reserved = {k: kwargs.pop(k, None) for k in RESERVED_KWARGS}
-        sim = SimSpec(duration=float(reserved["duration"] or 0.0),
-                      io_bytes=float(reserved["io_mb"] or 0.0),
+        io_mb = float(reserved["io_mb"] or 0.0)
+        duration = float(reserved["duration"] or 0.0)
+        if io_mb < 0:
+            raise ValueError(
+                f"task {self.defn.name!r}: io_mb must be non-negative "
+                f"(got {io_mb}) — it is the task's I/O footprint in MB")
+        if duration < 0:
+            raise ValueError(
+                f"task {self.defn.name!r}: duration must be non-negative "
+                f"(got {duration})")
+        sim = SimSpec(duration=duration, io_bytes=io_mb,
                       fail=bool(reserved["sim_fail"]))
         bw_override = reserved["storage_bw"]
         if rt is None:
@@ -207,10 +217,21 @@ class IORuntime:
     ``scheduler_cls`` exists for A/B comparisons (e.g. the frozen seed
     scheduler in ``benchmarks/_seed_impl.py``); it must match the
     ``Scheduler`` interface.
+
+    Data lifecycle (``lifecycle=``, see datalife.py): when any tier carries
+    a finite ``capacity_gb`` (or ``LifecycleConfig(enabled=True)``), every
+    I/O task's output becomes a tracked ``DataObject``, tier capacity is
+    reserved at grant and committed at finish, watermark/demand pressure on
+    a fast tier synthesizes eviction tasks (drain-then-delete of cold
+    objects), and tasks whose tracked inputs live only on a slower tier get
+    an automatic ``rt.prefetch`` staged in front of them (the CkIO read
+    pipeline). With no finite capacity the subsystem is inert and the
+    runtime behaves exactly as before.
     """
 
     def __init__(self, cluster: Cluster, backend: Backend | str = "sim",
-                 scheduler_cls=Scheduler):
+                 scheduler_cls=Scheduler,
+                 lifecycle: Optional[LifecycleConfig] = None):
         self.cluster = cluster
         if isinstance(backend, str):
             backend = SimBackend() if backend == "sim" else RealBackend()
@@ -218,6 +239,13 @@ class IORuntime:
         self.lock = threading.RLock()
         self.graph = TaskGraph()
         self.scheduler = scheduler_cls(cluster, launch=self.backend.launch)
+        self.catalog = DataCatalog(cluster, lifecycle, now=self.backend.now)
+        self.catalog.graph = self.graph
+        if self.catalog.enabled:
+            set_catalog = getattr(self.scheduler, "set_catalog", None)
+            if set_catalog is not None:
+                set_catalog(self.catalog)
+        self._in_tick = False
         self.backend.bind(self)
         self._entered = False
 
@@ -240,6 +268,8 @@ class IORuntime:
     def submit(self, defn: TaskDef, args, kwargs, sim: SimSpec,
                storage_bw=None, storage_tier=None):
         with self.lock:
+            args, kwargs = self._stage_inputs(defn, args, kwargs,
+                                              storage_tier)
             inst = TaskInstance(defn, args, kwargs, sim=sim,
                                 storage_bw=storage_bw,
                                 storage_tier=storage_tier)
@@ -253,18 +283,70 @@ class IORuntime:
                 validate(inst)
             inst.submit_time = self.backend.now()
             ready = self.graph.add(inst)
+            if inst.state != TaskState.FAILED:
+                # scheduled-reader tracking (LRU clock + eviction guard);
+                # tasks cancelled at add never run, so they never register
+                self.catalog.on_submit(inst)
             if ready:
                 self.scheduler.make_ready(inst)
             self.backend.on_submitted()
+            self._lifecycle_tick()
         if defn.returns > 1:
             return tuple(inst.futures)
         return inst.futures[0]
+
+    def _stage_inputs(self, defn: TaskDef, args, kwargs, storage_tier):
+        """CkIO-style auto-prefetch: any argument future whose tracked data
+        object is resident only on tiers slower than this task's target
+        placement is replaced by a staging ``rt.prefetch`` future (value
+        passes through the mover unchanged), so the read comes from the
+        fast tier and concurrent stagings pipeline ahead of the consumer
+        wave. One staging serves every reader of the same object."""
+        cat = self.catalog
+        if not cat.enabled or not cat.config.auto_prefetch:
+            return args, kwargs
+        if defn.signature in ("tier_drain", "tier_prefetch"):
+            return args, kwargs  # movers move data; they are never staged
+        order = cat.cluster.tier_names()
+        target = storage_tier or defn.storage_tier or \
+            (order[0] if order else None)
+        if target is None:
+            return args, kwargs
+
+        def map_arg(a, depth=0):
+            if isinstance(a, Future):
+                obj = cat.lookup_future(a)
+                if obj is not None and cat.wants_stage(obj, target):
+                    pf = cat.staging_future(obj, target)
+                    if pf is None:
+                        src = obj.fastest_tier(cat.tier_rank)
+                        pf = self.prefetch(a, to_tier=target, from_tier=src,
+                                           io_mb=obj.size_mb)
+                        cat.begin_stage(obj, target, pf)
+                    return pf
+                return a
+            if depth < 4:
+                if isinstance(a, list):
+                    return [map_arg(v, depth + 1) for v in a]
+                if isinstance(a, tuple):
+                    return tuple(map_arg(v, depth + 1) for v in a)
+                if isinstance(a, dict):
+                    return {k: map_arg(v, depth + 1) for k, v in a.items()}
+            return a
+
+        return (tuple(map_arg(a) for a in args),
+                {k: map_arg(v) for k, v in kwargs.items()})
 
     # ------------------------------------------------------------- completion
     def _handle_completion(self, task: TaskInstance) -> None:
         # called by the backend (sim loop / worker thread under runtime lock)
         self.scheduler.on_complete(task)
-        if task.state != TaskState.FAILED:
+        failed = task.state == TaskState.FAILED
+        # lifecycle bookkeeping AFTER the scheduler committed/cancelled the
+        # capacity reservation: residency registration, reader release,
+        # stage/evict mover resolution
+        self.catalog.on_task_done(task, failed=failed)
+        if not failed:
             newly_ready = self.graph.complete(task)
             if newly_ready:
                 self.scheduler.make_ready_many(newly_ready)
@@ -272,9 +354,74 @@ class IORuntime:
             # failed task leaves the graph and takes its (necessarily still
             # PENDING) data-descendants with it, so drain loops can't hang on
             # them; write-after-read successors are merely unblocked
-            _, newly_ready = self.graph.fail(task)
+            cancelled, newly_ready = self.graph.fail(task)
+            for c in cancelled:
+                self.catalog.on_task_done(c, failed=True)
             if newly_ready:
                 self.scheduler.make_ready_many(newly_ready)
+        self._lifecycle_tick()
+
+    # --------------------------------------------------------- data lifecycle
+    def _lifecycle_tick(self) -> bool:
+        """Run one eviction-planning pass: watermark pressure plus any
+        capacity-blocked demand the scheduler reported. Objects with a
+        durable copy are dropped immediately; the rest get drain-then-delete
+        eviction tasks (``rt.drain`` to the durable tier). Returns True when
+        any eviction was started — backends use this to retry placement
+        before declaring the scheduler stuck."""
+        cat = self.catalog
+        if not cat.enabled or self._in_tick:
+            return False
+        self._in_tick = True
+        try:
+            demand = getattr(self.scheduler, "capacity_blocked", None)
+            actions = cat.plan_evictions(demand)
+            if demand:
+                demand.clear()
+            progress = False
+            for act in actions:
+                if act.drain_to is None:
+                    cat.drop_now(act.obj, act.device)
+                    progress = True
+                else:
+                    fut = self.drain(None, to_tier=act.drain_to,
+                                     from_tier=act.device.tier,
+                                     io_mb=act.obj.size_mb)
+                    fut.task._datalife = ("evict", act.obj, act.device)
+                    progress = True
+            if progress:
+                self.scheduler._dirty = True
+            return progress
+        finally:
+            self._in_tick = False
+
+    def external_data(self, name: str, size_mb: float, tier: str,
+                      pinned: bool = False) -> Future:
+        """Register a dataset that already lives on ``tier`` (e.g. input
+        files on the parallel FS at t0 — the CkIO staging scenario) and
+        return a resolved Future tracked by the catalog: tasks taking it as
+        an argument get read penalties and auto-prefetch like any produced
+        object."""
+        if not self.catalog.enabled:
+            raise RuntimeError(
+                "external_data requires the data lifecycle subsystem: give "
+                "a tier a finite capacity_gb or pass "
+                "LifecycleConfig(enabled=True)")
+        with self.lock:
+            obj = self.catalog.add_external(name, size_mb, tier,
+                                            pinned=pinned)
+            fut = resolved_future(value=name, name=f"external:{name}")
+            self.catalog.map_future(fut, obj)
+        return fut
+
+    def pin(self, fut) -> None:
+        """Exempt the future's data object from eviction."""
+        with self.lock:
+            self.catalog.pin(fut)
+
+    def unpin(self, fut) -> None:
+        with self.lock:
+            self.catalog.unpin(fut)
 
     # ----------------------------------------------------- tier data movement
     def drain(self, data, to_tier: str, from_tier: Optional[str] = None,
@@ -299,6 +446,30 @@ class IORuntime:
 
     def _move(self, mover: TaskFunction, data, to_tier, from_tier, io_mb,
               storage_bw, path) -> Future:
+        if io_mb is not None and float(io_mb) < 0:
+            raise ValueError(
+                f"{mover.defn.name}: io_mb must be non-negative "
+                f"(got {io_mb}) — it is the movement's footprint in MB")
+        # no-op short-circuits: a same-tier "move", or data the catalog
+        # already knows to be resident at the destination, resolves
+        # immediately instead of scheduling a zero-progress movement task.
+        # A path= move is never short-circuited on residency alone: catalog
+        # residency is modelled state, and skipping it would report a real
+        # file as copied without copy_fsync ever running.
+        if from_tier is not None and from_tier == to_tier:
+            return data if isinstance(data, Future) else resolved_future(
+                data, name=f"noop_{mover.defn.name}")
+        if isinstance(data, Future) and self.catalog.enabled:
+            obj = self.catalog.lookup_future(data)
+            if obj is not None:
+                if to_tier in obj.residency and path is None:
+                    return data
+                # the catalog knows the payload's true footprint: charge the
+                # destination what residency registration will record, not
+                # whatever io_mb the caller guessed (a mismatch would desync
+                # used_mb from the resident-object sum and underflow on a
+                # later eviction)
+                io_mb = obj.size_mb
         # read-side floor: a single reader streams at most at the source
         # device's bandwidth (the write side is modelled/performed on the
         # destination tier the task is placed on)
@@ -330,8 +501,16 @@ class IORuntime:
         # pin to the destination tier only when the cluster models it; on a
         # plain single-tier cluster the move still runs, tier-agnostically
         tier_hint = to_tier if self.cluster.has_tier(to_tier) else None
-        return mover(data, src_path, dst_path, io_mb=io_mb, duration=dur,
-                     storage_bw=storage_bw, storage_tier=tier_hint)
+        # submit directly (not via TaskFunction.__call__) so runtime-
+        # synthesized movers — eviction drains fired from a completion on a
+        # backend worker thread — don't depend on the thread-local ambient
+        # runtime being set
+        sim = SimSpec(duration=dur, io_bytes=float(io_mb or 0.0))
+        return self.submit(
+            mover.defn, (data, src_path, dst_path), {}, sim,
+            storage_bw=parse_storage_bw(storage_bw)
+            if storage_bw is not None else None,
+            storage_tier=tier_hint)
 
     # ------------------------------------------------------------------ waits
     def barrier(self, final: bool = False) -> None:
@@ -359,9 +538,14 @@ class IORuntime:
             # per-tier occupancy: one entry per distinct device in the
             # hierarchy (shared tiers appear once)
             "devices": {d.name: {"tier": d.tier,
-                                 "bytes_written": d.bytes_written}
+                                 "bytes_written": d.bytes_written,
+                                 "capacity_mb": d.capacity_mb,
+                                 "used_mb": d.used_mb,
+                                 "peak_occupancy_mb": d.peak_occupancy_mb}
                         for d in self.cluster.devices},
         }
+        if self.catalog.enabled:
+            out["lifecycle"] = self.catalog.summary()
         be = self.backend
         if isinstance(be, SimBackend):
             out.update({

@@ -67,6 +67,7 @@ class Scheduler:
         self._validated: set[tuple] = set()    # class keys proven satisfiable
         self._tier_depth = max((len(w.tiers) for w in cluster.workers),
                                default=1)
+        self._recompute_tier_caps()
         self.running: set[int] = set()
         # tuners/learning_nodes are keyed per (signature, tier): plain ``sig``
         # for the default tier (seed-compatible), ``"sig@tier"`` for hints
@@ -79,6 +80,36 @@ class Scheduler:
         self._learning_dev_ids: set[int] = set()
         self.completed: list[TaskInstance] = []
         self.launch_log: list[tuple[float, str, str]] = []  # (tid, sig, worker)
+        # data lifecycle (datalife.py): None unless the runtime wires an
+        # enabled catalog — the capacity-less hot path stays untouched
+        self.catalog = None
+        self.capacity_blocked: dict[int, float] = {}  # id(dev) -> wanted MB
+
+    def set_catalog(self, catalog) -> None:
+        """Wire the data catalog (runtime calls this when the lifecycle
+        subsystem is enabled): grants then check + reserve tier capacity,
+        completions commit it, and capacity-blocked demand is reported for
+        demand-driven eviction."""
+        self.catalog = catalog
+        # the catalog may have applied TierCapacity budgets to devices
+        self._recompute_tier_caps()
+
+    def _recompute_tier_caps(self) -> None:
+        """Per-tier (and any-tier, key None) LARGEST device capacity, with
+        None meaning "some device is unlimited" — precomputed so the
+        per-submission feasibility check stays O(1) on the 100k-task hot
+        path (capacities are fixed once the runtime is constructed)."""
+        self._tier_max_cap: dict = {}
+        for d in self.cluster.devices:
+            for key in (d.tier, None):
+                if key in self._tier_max_cap \
+                        and self._tier_max_cap[key] is None:
+                    continue
+                if d.capacity_mb is None:
+                    self._tier_max_cap[key] = None
+                else:
+                    self._tier_max_cap[key] = max(
+                        self._tier_max_cap.get(key, 0.0), d.capacity_mb)
 
     # ------------------------------------------------------------------ utils
     @staticmethod
@@ -171,6 +202,25 @@ class Scheduler:
         half-registered state left behind (and never from a completion
         fan-out on a backend worker thread)."""
         self._validate_class(self._class_key(task))
+        # per-task (not per-class) feasibility: an output footprint larger
+        # than every eligible device's TOTAL capacity can never be granted,
+        # not even after evicting everything — without this check the task
+        # would block its placement class forever and the run would die with
+        # a generic "scheduler stuck" at the barrier. Only meaningful while
+        # capacity is enforced (catalog wired; see _capacity_ok).
+        mb = task.sim.io_bytes
+        if self.catalog is None or task.defn.task_type == TaskType.COMPUTE \
+                or mb <= 0:
+            return
+        tier = task.tier
+        # (an unknown tier already raised in _validate_class above)
+        cap = self._tier_max_cap.get(tier if tier is not None else None)
+        if cap is not None and mb > cap:
+            raise SchedulerError(
+                f"io_mb={mb} exceeds every eligible device's total "
+                f"capacity"
+                + (f" on tier {tier!r}" if tier is not None else "")
+                + f" (max {cap:.0f} MB)")
 
     def _validate_class(self, key: tuple) -> None:
         """Once-per-class satisfiability check (at submission time): a static
@@ -318,6 +368,33 @@ class Scheduler:
                     return True
         return False
 
+    def _capacity_ok(self, task: TaskInstance, dev) -> bool:
+        """Capacity side of a grant: the task's output footprint must fit on
+        the device (unlimited tiers always fit). A refusal is recorded as
+        *demand* so the runtime's lifecycle tick can evict to make room —
+        the tier-agnostic walk meanwhile spills the task down the
+        hierarchy. Gated on the catalog: with the lifecycle subsystem
+        explicitly disabled nothing would ever free occupancy, so enforcing
+        the budget would wedge pinned workloads — capacity_gb is then
+        documentation, not a constraint."""
+        if self.catalog is None or dev.capacity_gb is None \
+                or task.sim.io_bytes <= 0:
+            return True
+        if dev.can_reserve_capacity(task.sim.io_bytes):
+            return True
+        did = id(dev)
+        self.capacity_blocked[did] = max(
+            self.capacity_blocked.get(did, 0.0), task.sim.io_bytes)
+        return False
+
+    def _reserve_capacity(self, task: TaskInstance, dev) -> None:
+        """Reserve-at-grant (commit happens in on_complete)."""
+        if self.catalog is None or dev.capacity_gb is None \
+                or task.sim.io_bytes <= 0:
+            return
+        dev.reserve_capacity(task.sim.io_bytes)
+        task.reserved_mb = task.sim.io_bytes
+
     def _grant_io(self, task: TaskInstance, w: WorkerNode, dev,
                   bw: float) -> bool:
         if w.learning_owner is not None:
@@ -328,9 +405,12 @@ class Scheduler:
             return False
         if bw > 0 and not dev.can_allocate(bw):
             return False
+        if not self._capacity_ok(task, dev):
+            return False
         w.free_io_executors -= 1
         if bw >= 0:
             dev.allocate(bw)
+        self._reserve_capacity(task, dev)
         self._start(task, w, bw=bw, device=dev)
         return True
 
@@ -350,10 +430,13 @@ class Scheduler:
             c = tuner.current_constraint()
             if node.free_io_executors <= 0 or not dev.can_allocate(c):
                 return False
+            if not self._capacity_ok(task, dev):
+                return False
             if not tuner.admit():
                 return False  # current epoch full; wait for the next one
             node.free_io_executors -= 1
             dev.allocate(c)
+            self._reserve_capacity(task, dev)
             task.epoch = tuner.epoch
             self._start(task, node, bw=c, device=dev)
             return True
@@ -369,8 +452,11 @@ class Scheduler:
                 continue
             if w.free_io_executors <= 0 or not dev.can_allocate(c):
                 continue
+            if not self._capacity_ok(task, dev):
+                continue
             w.free_io_executors -= 1
             dev.allocate(c)
+            self._reserve_capacity(task, dev)
             tuner.record_choice(c)
             self._start(task, w, bw=c, device=dev)
             return True
@@ -397,6 +483,11 @@ class Scheduler:
         task.device = device
         task.granted_bw = bw
         task.state = TaskState.RUNNING
+        if self.catalog is not None:
+            # read penalty snapshot: inputs are charged from their fastest
+            # resident tier as of this grant (must precede backend.launch,
+            # which bakes the penalty into the task's finish estimate)
+            self.catalog.on_grant(task)
         self.running.add(task.tid)
         self.launch_log.append((task.tid, task.defn.signature, worker.name))
         self._launch(task, worker)
@@ -411,7 +502,15 @@ class Scheduler:
             w.free_cpus += task.defn.computing_units
         else:
             w.free_io_executors += 1
-            (task.device or w.storage).release(task.granted_bw)
+            dev = task.device or w.storage
+            dev.release(task.granted_bw)
+            if task.reserved_mb:
+                # commit-at-finish: the written bytes become resident data;
+                # a failed writer's reservation is returned instead
+                if task.state == TaskState.FAILED:
+                    dev.cancel_reservation(task.reserved_mb)
+                else:
+                    dev.commit_capacity(task.reserved_mb)
         if task.epoch is not None:
             key = self._tuner_key(task.defn.signature, task.tier)
             tuner = self.tuners[key]

@@ -56,7 +56,10 @@ def read_floor_time(src: StorageDevice, mb: float) -> float:
     reader streams at most at the device bandwidth. Used as the ``min_end``
     floor of runtime-generated drain/prefetch tasks — the *write* side is
     what the simulator models dynamically (the task is placed on the
-    destination tier, so it sees that device's congestion)."""
+    destination tier, so it sees that device's congestion) — and as the
+    data-lifecycle read penalty: the catalog charges consumers this floor
+    for inputs pulled from their fastest resident tier (datalife.py), which
+    is what auto-prefetch staging shrinks."""
     if mb <= 0:
         return 0.0
     return mb / src.bandwidth if src.bandwidth > 0 else float("inf")

@@ -147,6 +147,12 @@ class TaskInstance:
         self.device = None                   # StorageDevice the I/O was
         #                                      granted on (a tier of .worker)
         self.granted_bw: float = 0.0         # bandwidth reserved at launch
+        self.reserved_mb: float = 0.0        # capacity reserved at grant on
+        #                                      .device (commit-at-finish)
+        self.read_penalty: float = 0.0       # simulated input-read floor
+        #                                      (datalife catalog, at grant)
+        self._datalife = None                # lifecycle mover tag:
+        #                                      ("stage"|"evict", obj, ...)
         self.submit_time: float = 0.0
         self.start_time: float = 0.0
         self.end_time: float = 0.0
@@ -169,6 +175,19 @@ class TaskInstance:
 
     def __repr__(self) -> str:
         return f"<Task {self.defn.name}#{self.tid} {self.state.value}>"
+
+
+def resolved_future(value: Any = None, name: str = "resolved") -> Future:
+    """A Future that is already resolved to ``value``, backed by a DONE
+    task that never entered any graph. Used where an operation short-
+    circuits (e.g. a drain/prefetch that is already satisfied per the data
+    catalog): downstream tasks may depend on it — the DONE producer
+    satisfies the edge immediately."""
+    inst = TaskInstance(TaskDef(fn=lambda: value, name=name), (), {})
+    inst.state = TaskState.DONE
+    fut = inst.futures[0]
+    fut.set_value(value)
+    return fut
 
 
 class Barrier:

@@ -1,0 +1,655 @@
+"""Data lifecycle subsystem: catalog, capacity accounting, eviction,
+auto-prefetch, no-op movement, construction-time validation (ISSUE 3
+tentpole)."""
+import itertools
+
+import pytest
+
+from repro.core import (Cluster, IORuntime, LifecycleConfig, LRUEviction,
+                        SimBackend, StorageDevice, TaskState, TierCapacity,
+                        WorkerNode, constraint, io, task)
+from repro.core.task import TaskInstance
+
+
+def _fresh_tids():
+    TaskInstance._ids = itertools.count()
+
+
+def two_tier(ssd_capacity_gb=None, ssd_bw=1000.0, ssd_cap=400.0,
+             fs_bw=200.0, fs_cap=100.0, n_workers=1):
+    fs = StorageDevice(name="shared-fs", bandwidth=fs_bw,
+                       per_stream_cap=fs_cap, tier="fs")
+    workers = []
+    for i in range(n_workers):
+        ssd = StorageDevice(name=f"w{i}-ssd", bandwidth=ssd_bw,
+                            per_stream_cap=ssd_cap, tier="ssd",
+                            capacity_gb=ssd_capacity_gb)
+        workers.append(WorkerNode(name=f"w{i}", cpus=4, io_executors=8,
+                                  tiers=[ssd, fs]))
+    return Cluster(workers=workers)
+
+
+# ------------------------------------------------------------- validation
+def test_capacity_gb_validated_at_construction():
+    with pytest.raises(ValueError, match="capacity_gb must be positive"):
+        StorageDevice(name="bad", capacity_gb=0)
+    with pytest.raises(ValueError, match="capacity_gb must be positive"):
+        StorageDevice(name="bad", capacity_gb=-1.5)
+    with pytest.raises(ValueError, match="bandwidth must be positive"):
+        StorageDevice(name="bad", bandwidth=0)
+
+
+def test_tier_capacity_watermarks_validated():
+    with pytest.raises(ValueError, match="high_watermark"):
+        TierCapacity("ssd", high_watermark=0.0)
+    with pytest.raises(ValueError, match="low_watermark"):
+        TierCapacity("ssd", low_watermark=1.5)
+    with pytest.raises(ValueError, match="must not exceed"):
+        TierCapacity("ssd", high_watermark=0.5, low_watermark=0.8)
+    with pytest.raises(ValueError, match="capacity_gb must be positive"):
+        TierCapacity("ssd", capacity_gb=-1)
+    with pytest.raises(ValueError, match="high_watermark"):
+        LifecycleConfig(high_watermark=2.0)
+
+
+def test_negative_io_mb_and_duration_rejected_at_call():
+    with IORuntime(two_tier(), backend=SimBackend()) as rt:
+        @io
+        @task()
+        def wr(i):
+            pass
+
+        @task()
+        def comp(i):
+            pass
+        with pytest.raises(ValueError, match="io_mb must be non-negative"):
+            wr(0, io_mb=-5)
+        with pytest.raises(ValueError, match="duration must be non-negative"):
+            comp(0, duration=-1.0)
+        rt.barrier(final=True)
+    assert rt.graph.unfinished == 0
+
+
+# ------------------------------------------------------ device accounting
+def test_device_capacity_accounting():
+    d = StorageDevice(name="d", capacity_gb=1.0)  # 1024 MB
+    assert d.capacity_mb == 1024.0
+    d.reserve_capacity(600.0)
+    assert d.reserved_mb == 600.0 and d.free_capacity_mb() == 424.0
+    assert not d.can_reserve_capacity(500.0)
+    with pytest.raises(RuntimeError, match="over-filling"):
+        d.reserve_capacity(500.0)
+    d.commit_capacity(600.0)
+    assert d.used_mb == 600.0 and d.reserved_mb == 0.0
+    d.reserve_capacity(100.0)
+    d.cancel_reservation(100.0)  # failed writer
+    assert d.occupancy_mb == 600.0
+    d.free_capacity(600.0)  # eviction
+    assert d.used_mb == 0.0
+    assert d.peak_occupancy_mb == 700.0
+    d.reset()
+    assert d.peak_occupancy_mb == 0.0
+
+
+def test_unlimited_device_is_inert():
+    d = StorageDevice(name="d")
+    assert d.capacity_mb is None and d.free_capacity_mb() == float("inf")
+    d.reserve_capacity(1e9)  # no-ops, never raises
+    d.commit_capacity(1e9)
+    assert d.used_mb == 0.0
+
+
+# ------------------------------------------------- enable/disable plumbing
+def test_catalog_disabled_without_capacity():
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        wr(0, io_mb=10)
+        rt.barrier(final=True)
+        st = rt.stats()
+    assert not rt.catalog.enabled
+    assert "lifecycle" not in st
+    assert rt.scheduler.catalog is None
+    assert len(rt.catalog.objects) == 0
+
+
+def test_explicit_enable_without_capacity():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True)
+    with IORuntime(two_tier(), backend=SimBackend(), lifecycle=cfg) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=10)
+        rt.barrier(final=True)
+    obj = rt.catalog.lookup_future(f)
+    assert obj is not None and obj.residency.keys() == {"ssd"}
+
+
+def test_tier_capacity_config_applies_to_devices():
+    cluster = two_tier()
+    cfg = LifecycleConfig(tiers={"ssd": TierCapacity("ssd",
+                                                     capacity_gb=0.5)})
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        rt.barrier(final=True)
+    assert rt.catalog.enabled
+    assert cluster.workers[0].storage.capacity_gb == 0.5
+
+
+# -------------------------------------------- reserve/commit/spill behavior
+def test_reserve_at_grant_commit_at_finish():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=300)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        wr(0, io_mb=100)
+        rt.barrier(final=True)
+    ssd = cluster.workers[0].storage
+    assert ssd.used_mb == 100.0 and ssd.reserved_mb == 0.0
+    assert ssd.peak_occupancy_mb == 100.0
+
+
+def test_failed_writer_reservation_cancelled():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        wr(0, io_mb=100, sim_fail=True)
+        rt.barrier(final=True)
+    ssd = cluster.workers[0].storage
+    assert ssd.used_mb == 0.0 and ssd.reserved_mb == 0.0
+    assert len(rt.catalog.objects) == 0  # failed write is not resident data
+
+
+def test_full_tier_spills_down_hierarchy():
+    """naive-overflow placement: with eviction off, a full SSD sends
+    tier-agnostic writes to the next tier instead of queueing."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=200 / 1024.0)  # fits exactly 2x100
+    cfg = LifecycleConfig(auto_evict=False)
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        @constraint(storageBW=50)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        for i in range(4):
+            wr(i, io_mb=100)
+        rt.barrier(final=True)
+    tiers = sorted(t.device.tier for t in rt.scheduler.completed)
+    assert tiers == ["fs", "fs", "ssd", "ssd"]
+    ssd = cluster.workers[0].storage
+    assert ssd.used_mb == 200.0
+    assert ssd.peak_occupancy_mb <= ssd.capacity_mb
+
+
+# ----------------------------------------------------------------- eviction
+def _eviction_run(pin_first=False, n=8, ssd_gb=0.375):
+    """Write n 100MB objects through a small SSD with generous step gaps so
+    watermark eviction has shadow time."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=ssd_gb)  # 384 MB default
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @task(returns=1)
+        def step(prev, gate, i):
+            pass
+
+        @constraint(storageBW=300)
+        @io
+        @task(returns=1)
+        def wr(x, i):
+            pass
+        prev, gate, futs = None, None, []
+        for i in range(n):
+            prev = step(prev, gate, i, duration=2.0)
+            f = wr(prev, i, io_mb=100)
+            if pin_first and i == 0:
+                rt.pin(f)
+            futs.append(f)
+            gate = f
+        rt.barrier(final=True)
+    return rt, cluster, futs
+
+
+def test_watermark_eviction_drains_cold_objects():
+    rt, cluster, futs = _eviction_run()
+    cat = rt.catalog
+    assert cat.n_evictions > 0
+    ssd = cluster.workers[0].storage
+    assert ssd.peak_occupancy_mb <= ssd.capacity_mb + 1e-6
+    # drain-then-delete: every evicted object still has a durable fs copy
+    for ev in cat.events:
+        assert ev["durable"], ev
+        assert ev["readers"] == 0, ev
+    # all writes stayed on the fast tier (the point of evicting)
+    wr_tiers = {t.device.tier for t in rt.scheduler.completed
+                if t.defn.name == "wr"}
+    assert wr_tiers == {"ssd"}
+
+
+def test_lru_eviction_order():
+    rt, _, futs = _eviction_run()
+    evicted_oids = [e["oid"] for e in rt.catalog.events]
+    # LRU by last reader: eviction order follows object age order
+    assert evicted_oids == sorted(evicted_oids)
+
+
+def test_pinned_objects_exempt_from_eviction():
+    rt, _, futs = _eviction_run(pin_first=True)
+    pinned = rt.catalog.lookup_future(futs[0])
+    assert pinned.pinned
+    assert all(e["oid"] != pinned.oid for e in rt.catalog.events)
+    assert "ssd" in pinned.residency  # still resident at the end
+
+
+def test_no_eviction_while_scheduled_reader_outstanding():
+    """An object whose consumer is submitted (even long before it runs) is
+    never selected for eviction."""
+    rt, _, futs = _eviction_run()
+    cat = rt.catalog
+    assert cat.events, "scenario must evict"
+    for ev in cat.events:
+        obj = cat.objects[ev["oid"]]
+        t_sel = ev["selected_at"]
+        for tid, t0, t1 in obj.reader_log:
+            assert not (t0 <= t_sel and (t1 is None or t1 > t_sel)), \
+                (ev, obj.reader_log)
+
+
+def test_demand_eviction_unblocks_pinned_tier_writes():
+    """A tier-pinned writer that cannot fit triggers demand-driven eviction
+    below the watermark instead of deadlocking."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=0.25)  # 256 MB: one 200MB at a time
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=300, tier="ssd")
+        @io
+        @task(returns=1)
+        def wrs(i):
+            pass
+        for i in range(4):
+            wrs(i, io_mb=200)
+        rt.barrier(final=True)
+    assert rt.catalog.n_evictions >= 3
+    done = [t for t in rt.scheduler.completed if t.defn.name == "wrs"]
+    assert len(done) == 4 and all(t.device.tier == "ssd" for t in done)
+
+
+def test_lru_policy_select_unit():
+    a = _mk_obj("a", 10, last_use=5.0)
+    b = _mk_obj("b", 10, last_use=1.0)
+    c = _mk_obj("c", 10, last_use=3.0)
+    chosen = LRUEviction().select([a, b, c], need_mb=15)
+    assert [o.name for o in chosen] == ["b", "c"]
+
+
+def _mk_obj(name, size, last_use):
+    from repro.core import DataObject
+    o = DataObject(name, size)
+    o.last_use = last_use
+    return o
+
+
+# ------------------------------------------------------------ auto-prefetch
+def _prefetch_run(auto_prefetch, n=6):
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=8.0, fs_bw=200.0)
+    cfg = LifecycleConfig(auto_prefetch=auto_prefetch)
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        shards = [rt.external_data(f"s{i}", 200.0, "fs") for i in range(n)]
+
+        @task(returns=1)
+        def train(prev, shard, i):
+            pass
+        prev = None
+        for i, s in enumerate(shards):
+            prev = train(prev, s, i, duration=1.0)
+        rt.barrier(final=True)
+    return rt
+
+
+def test_auto_prefetch_stages_slow_tier_inputs():
+    rt = _prefetch_run(True)
+    assert rt.catalog.n_prefetches == 6
+    movers = [t for t in rt.scheduler.completed
+              if t.defn.name == "tier_prefetch"]
+    assert len(movers) == 6
+    assert all(t.device.tier == "ssd" for t in movers)
+    # consumers read from the staged fast copy: penalties reflect ssd
+    pens = [t.read_penalty for t in rt.scheduler.completed
+            if t.defn.name == "train"]
+    assert all(p == 200.0 / 1000.0 for p in pens)
+
+
+def test_auto_prefetch_off_pays_fs_reads_inline():
+    rt = _prefetch_run(False)
+    assert rt.catalog.n_prefetches == 0
+    pens = [t.read_penalty for t in rt.scheduler.completed
+            if t.defn.name == "train"]
+    assert all(p == 200.0 / 200.0 for p in pens)
+
+
+def test_auto_prefetch_hides_read_time():
+    slow = _prefetch_run(False).stats()["makespan"]
+    fast = _prefetch_run(True).stats()["makespan"]
+    assert fast < slow
+
+
+def test_one_staging_serves_many_readers():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=8.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        shard = rt.external_data("s", 100.0, "fs")
+
+        @task(returns=1)
+        def train(shard, i):
+            pass
+        for i in range(5):
+            train(shard, i, duration=0.5)
+        rt.barrier(final=True)
+    assert rt.catalog.n_prefetches == 1
+
+
+def test_external_data_validation():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        with pytest.raises(ValueError, match="tape"):
+            rt.external_data("x", 10.0, "tape")
+        with pytest.raises(ValueError, match="size_mb"):
+            rt.external_data("x", -1.0, "fs")
+        rt.barrier(final=True)
+    with IORuntime(two_tier(), backend=SimBackend()) as rt:  # disabled
+        with pytest.raises(RuntimeError, match="lifecycle"):
+            rt.external_data("x", 10.0, "fs")
+        rt.barrier(final=True)
+
+
+# ------------------------------------------------------------- no-op moves
+def test_same_tier_move_resolves_immediately():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=10)
+        d = rt.drain(f, to_tier="ssd", from_tier="ssd", io_mb=10)
+        assert d is f  # the producer future itself: no movement task
+        p = rt.prefetch("plainvalue", to_tier="fs", from_tier="fs")
+        assert p.resolved() and p.value() == "plainvalue"
+        rt.barrier(final=True)
+    names = [t.defn.name for t in rt.scheduler.completed]
+    assert "tier_drain" not in names and "tier_prefetch" not in names
+
+
+def test_move_to_tier_already_resident_is_noop():
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=10)  # lands on ssd
+        rt.wait_on(f)
+        p = rt.prefetch(f, to_tier="ssd", from_tier="fs", io_mb=10)
+        assert p is f  # catalog knows it's already on ssd
+        d = rt.drain(f, to_tier="fs", io_mb=10)  # NOT resident on fs: moves
+        rt.wait_on(d)
+        rt.barrier(final=True)
+    names = [t.defn.name for t in rt.scheduler.completed]
+    assert "tier_prefetch" not in names and names.count("tier_drain") == 1
+    obj = rt.catalog.lookup_future(f)
+    assert set(obj.residency) == {"ssd", "fs"}
+
+
+def test_user_move_with_wrong_io_mb_stays_consistent():
+    """A user-issued move of a tracked object charges the object's true
+    footprint, not the caller's io_mb guess — otherwise used_mb desyncs
+    from the resident-object sum and a later eviction underflows."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=128, storage_tier="fs")
+        rt.wait_on(f)
+        rt.wait_on(rt.prefetch(f, to_tier="ssd", io_mb=50))  # wrong hint
+        rt.barrier(final=True)
+    ssd = cluster.workers[0].storage
+    obj = rt.catalog.lookup_future(f)
+    assert ssd.used_mb == obj.size_mb == 128.0
+    assert set(obj.residency) == {"fs", "ssd"}
+
+
+def test_io_mb_larger_than_tier_capacity_rejected_at_submission():
+    """An output footprint no eligible device can EVER hold (even empty)
+    raises at the call site instead of wedging its placement class until a
+    generic scheduler-stuck error at the barrier."""
+    from repro.core import SchedulerError
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=10 / 1024.0)  # 10 MB ssd
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @constraint(storageBW=100, tier="ssd")
+        @io
+        @task(returns=1)
+        def wrs(i):
+            pass
+        with pytest.raises(SchedulerError, match="total capacity"):
+            wrs(0, io_mb=100)
+        wrs(1, io_mb=5)  # a fittable same-class task is unaffected
+        # tier-agnostic stays fine: the unlimited fs tier can hold it
+        @io
+        @task(returns=1)
+        def wr_any(i):
+            pass
+        wr_any(2, io_mb=100)
+        rt.barrier(final=True)
+    done = [t.defn.name for t in rt.scheduler.completed]
+    assert done.count("wrs") == 1 and done.count("wr_any") == 1
+    assert not any(t.defn.name == "wrs" and t.args[0] == 0
+                   for t in rt.scheduler.completed)
+
+
+def test_object_too_big_for_fast_tier_read_in_place_not_staged():
+    """Auto-prefetch must not stage an object larger than the fast tier's
+    total capacity — the consumer reads it from the slow tier instead of
+    crashing its submission with the staging's SchedulerError."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=64 / 1024.0)  # 64 MB ssd
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        big = rt.external_data("big", 100.0, "fs")  # cannot ever fit ssd
+
+        @task(returns=1)
+        def train(shard, i):
+            pass
+        train(big, 0, duration=0.5)  # must not raise
+        rt.barrier(final=True)
+    assert rt.catalog.n_prefetches == 0
+    pens = [t.read_penalty for t in rt.scheduler.completed
+            if t.defn.name == "train"]
+    assert pens == [100.0 / 200.0]  # read from fs, in place
+
+
+def test_drain_of_pending_producer_keeps_accounting_consistent():
+    """A drain submitted before its producer registered carries the
+    caller's io_mb guess; the catalog must not record the true-size object
+    against that commit (used_mb == resident sum stays an invariant)."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=1.0)
+    cat_cluster = cluster
+    with IORuntime(cluster, backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=30, storage_tier="fs")
+        rt.drain(f, to_tier="ssd", io_mb=5)  # wrong guess, producer pending
+        rt.barrier(final=True)
+    cat = rt.catalog
+    for d in cat_cluster.devices:
+        resident = cat._resident.get(id(d), set())
+        if d.capacity_mb is not None:
+            assert abs(d.used_mb - sum(o.size_mb for o in resident)) < 1e-6
+
+
+def test_finite_durable_tier_rejected_with_auto_evict():
+    from repro.core import Cluster
+    cluster = Cluster.make_tiered(n_workers=1, ssd_capacity_gb=0.0625,
+                                  fs_capacity_gb=0.125)
+    with pytest.raises(ValueError, match="durable tier"):
+        IORuntime(cluster, backend=SimBackend())
+    # allowed when eviction is off (naive-overflow modelling)
+    rt = IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_evict=False))
+    assert rt.catalog.enabled
+
+
+def test_tier_capacity_config_reaches_scheduler_feasibility():
+    """TierCapacity budgets are applied by the catalog after scheduler
+    construction; the submission-time feasibility map must see them."""
+    from repro.core import SchedulerError
+    _fresh_tids()
+    cluster = two_tier()
+    cfg = LifecycleConfig(tiers={"ssd": TierCapacity(
+        "ssd", capacity_gb=10 / 1024.0)})
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        @io
+        @task(returns=1)
+        def wrs(i):
+            pass
+        with pytest.raises(SchedulerError, match="total capacity"):
+            wrs(0, io_mb=100, storage_tier="ssd")
+        rt.barrier(final=True)
+
+
+def test_explicit_disable_makes_finite_capacity_inert():
+    """LifecycleConfig(enabled=False) must disable capacity ENFORCEMENT
+    too: nothing would ever free occupancy, so pinned-tier workloads would
+    otherwise wedge behind a full budget."""
+    _fresh_tids()
+    cluster = two_tier(ssd_capacity_gb=100 / 1024.0)  # 100 MB
+    cfg = LifecycleConfig(enabled=False)
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        @constraint(storageBW=100, tier="ssd")
+        @io
+        @task(returns=1)
+        def wrs(i):
+            pass
+        for i in range(6):
+            wrs(i, io_mb=60)  # 360 MB through the "100 MB" tier
+        rt.barrier(final=True)  # must not get stuck
+    assert len(rt.scheduler.completed) == 6
+    assert cluster.workers[0].storage.used_mb == 0.0  # nothing accounted
+
+
+def test_mover_negative_io_mb_rejected():
+    _fresh_tids()
+    with IORuntime(two_tier(ssd_capacity_gb=1.0),
+                   backend=SimBackend()) as rt:
+        with pytest.raises(ValueError, match="io_mb must be non-negative"):
+            rt.drain(None, to_tier="fs", from_tier="ssd", io_mb=-50)
+        rt.barrier(final=True)
+
+
+def test_path_move_not_short_circuited_by_model_residency(tmp_path):
+    """Catalog residency is modelled state; a path= drain must still copy
+    the real file even if the object is already 'resident' at the
+    destination per the model."""
+    from repro.core import RealBackend
+    ssd_dir, fs_dir = tmp_path / "ssd", tmp_path / "fs"
+    ssd_dir.mkdir(), fs_dir.mkdir()
+    (ssd_dir / "blob.bin").write_bytes(b"x" * 1024)
+    fs = StorageDevice(name="pfs", bandwidth=400, per_stream_cap=80,
+                       tier="fs")
+    ssd = StorageDevice(name="d", bandwidth=1000, per_stream_cap=500,
+                        capacity_gb=1.0)
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                          tiers=[ssd, fs])])
+    backend = RealBackend(tier_dirs={"ssd": ssd_dir, "fs": fs_dir})
+    with IORuntime(cluster, backend=backend) as rt:
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        f = wr(0, io_mb=0.001)
+        rt.barrier()  # full completion bookkeeping, not just the future
+        # model the object as already fs-resident, then move the real file
+        obj = rt.catalog.lookup_future(f)
+        rt.catalog._add_residency(obj, fs)
+        fut = rt.drain(f, to_tier="fs", from_tier="ssd",
+                       io_mb=obj.size_mb, path="blob.bin")
+        assert fut is not f  # a real mover ran, not the short-circuit
+        rt.wait_on(fut)
+        rt.barrier(final=True)
+    assert (fs_dir / "blob.bin").read_bytes() == b"x" * 1024
+
+
+# ----------------------------------------------- checkpoint fast_keep (GC)
+def test_checkpoint_fast_keep_default_and_validation(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    m = CheckpointManager(tmp_path / "fs", keep=3, fast_dir=tmp_path / "bb")
+    assert m.fast_keep == 1
+    m2 = CheckpointManager(tmp_path / "fs2", keep=0,
+                           fast_dir=tmp_path / "bb2")
+    assert m2.fast_keep == 0
+    with pytest.raises(ValueError, match="fast_keep"):
+        CheckpointManager(tmp_path / "fs3", fast_dir=tmp_path / "bb3",
+                          fast_keep=-1)
+
+
+def test_checkpoint_fast_tier_trimmed_more_aggressively(tmp_path):
+    import numpy as np
+    from repro.checkpoint import CheckpointManager
+    fs_dir, bb_dir = tmp_path / "fs", tmp_path / "bb"
+    dev = StorageDevice(name="d", bandwidth=1000, per_stream_cap=500)
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                          storage=dev)])
+    mgr = CheckpointManager(fs_dir, n_shards=2, keep=3, fast_dir=bb_dir,
+                            overrun_policy="wait")
+    tree = {"w": np.zeros((64, 64))}
+    from repro.core import RealBackend
+    with IORuntime(cluster, backend=RealBackend()) as rt:
+        for s in (1, 2, 3, 4):
+            mgr.save(s, tree)
+        mgr.wait()
+    durable = sorted(d.name for d in fs_dir.glob("step_*"))
+    fast = sorted(d.name for d in bb_dir.glob("step_*"))
+    assert len(durable) == 3  # keep=3 durable checkpoints
+    assert fast == ["step_00000004"]  # fast tier holds only the newest
+
+
+def test_checkpoint_failed_save_shards_trimmed_from_fast_tier(tmp_path):
+    """A save that never committed its manifest (failed drain) must not
+    leak its shards on the finite fast tier once superseded."""
+    from repro.checkpoint import CheckpointManager
+    fs_dir, bb_dir = tmp_path / "fs", tmp_path / "bb"
+    mgr = CheckpointManager(fs_dir, n_shards=2, keep=3, fast_dir=bb_dir)
+    # simulate a failed save: fast shards exist, no durable manifest
+    dead = bb_dir / "step_00000001"
+    dead.mkdir(parents=True)
+    (dead / "shard_0000.bin").write_bytes(b"orphan")
+    # a later durable checkpoint supersedes it
+    ok_fast = bb_dir / "step_00000002"
+    ok_fast.mkdir()
+    ok_durable = fs_dir / "step_00000002"
+    ok_durable.mkdir(parents=True)
+    (ok_durable / "MANIFEST.json").write_text('{"step": 2, "shards": []}')
+    mgr._gc()
+    assert not dead.exists()      # orphan trimmed
+    assert ok_fast.exists()       # newest durable kept (fast_keep=1)

@@ -49,6 +49,18 @@ def make_cluster():
                                fs_bw=120.0, fs_stream_cap=8.0)
 
 
+def make_capacity_cluster():
+    """Same hierarchy with finite fast tiers (64 MB per-worker SSD, 128 MB
+    shared burst buffer) so recipes exercise reserve/commit accounting,
+    spill, and eviction; the fs tier stays the unlimited durable store."""
+    return Cluster.make_tiered(n_workers=3, cpus=4, io_executors=8,
+                               ssd_bw=240.0, ssd_stream_cap=16.0,
+                               bb_bw=480.0, bb_stream_cap=48.0,
+                               fs_bw=120.0, fs_stream_cap=8.0,
+                               ssd_capacity_gb=0.0625,
+                               bb_capacity_gb=0.125)
+
+
 def normalize(recipe):
     """Make an arbitrary generated recipe safe/deterministic:
     node = (kind, n_deps, size, bw_idx, tier_idx, fail_flag)."""
@@ -62,11 +74,11 @@ def normalize(recipe):
     return out
 
 
-def run_recipe(recipe):
+def run_recipe(recipe, make=make_cluster):
     """Build and run the DAG a recipe describes; returns (runtime, cluster,
     expected-fail map by recipe index)."""
     _fresh_tids()
-    cluster = make_cluster()
+    cluster = make()
     rt = IORuntime(cluster, backend=SimBackend())
     expected_failed = {}
     with rt:
@@ -208,6 +220,61 @@ def test_makespan_monotone_in_tier_bandwidth_fallback():
     _monotone_makespan([7] * 12, 16.0, 48.0, 1.5)
 
 
+# --------------------------------------------------- capacity invariants
+def assert_capacity_invariants(rt, cluster):
+    """Universal data-lifecycle invariants on a finite-capacity hierarchy
+    (ISSUE 3): occupancy bounded, accounting drained, eviction safe."""
+    cat = rt.catalog
+    assert cat.enabled
+    tasks = sorted(rt.graph.tasks.values(), key=lambda t: t.tid)
+    # -- everything (including runtime-synthesized movers) drained
+    assert rt.graph.unfinished == 0
+    for t in tasks:
+        assert t.state in (TaskState.DONE, TaskState.FAILED), t
+    for d in cluster.devices:
+        # -- bandwidth budget restored, no reservation leaked
+        assert abs(d.available_bw - d.bandwidth) < 1e-6, d.name
+        assert d.active_io == 0, d.name
+        assert abs(d.reserved_mb) < 1e-6, d.name
+        if d.capacity_mb is None:
+            continue
+        # -- per-tier occupancy never exceeded capacity_gb at any instant
+        assert d.peak_occupancy_mb <= d.capacity_mb + 1e-6, \
+            f"{d.name}: peak {d.peak_occupancy_mb} > {d.capacity_mb}"
+        # -- committed occupancy equals the catalog's resident objects
+        resident = cat._resident.get(id(d), set())
+        assert abs(d.used_mb - sum(o.size_mb for o in resident)) < 1e-6, \
+            (d.name, d.used_mb, sorted(o.name for o in resident))
+    # -- eviction audit: durable copy survives, pinned exempt, and no
+    #    scheduled reader existed when the victim was selected
+    for ev in cat.events:
+        assert ev["durable"], ev
+        assert not ev["pinned"], ev
+        obj = cat.objects[ev["oid"]]
+        t_sel = ev["selected_at"]
+        for tid, t0, t1 in obj.reader_log:
+            assert not (t0 <= t_sel and (t1 is None or t1 > t_sel)), \
+                (ev, (tid, t0, t1))
+
+
+@pytest.mark.parametrize("recipe_idx", range(len(DET_RECIPES)))
+def test_capacity_invariants_deterministic(recipe_idx):
+    recipe = normalize(DET_RECIPES[recipe_idx])
+    rt, cluster, _ = run_recipe(recipe, make=make_capacity_cluster)
+    assert_capacity_invariants(rt, cluster)
+
+
+def test_capacity_eviction_happens_under_pressure_fallback():
+    """A write-heavy chain through the tiny SSD/bb must actually trigger
+    the eviction path (so the invariants above are not vacuous)."""
+    recipe = normalize(
+        [("C", 0, 8, 0, 0, False)] +
+        [("S", 1, 36, 1, 1, False) for _ in range(14)])
+    rt, cluster, _ = run_recipe(recipe, make=make_capacity_cluster)
+    assert_capacity_invariants(rt, cluster)
+    assert rt.catalog.n_evictions > 0
+
+
 # ------------------------------------------------------------ properties
 NODE = st.tuples(st.sampled_from(["C", "S", "A"]),
                  st.integers(0, 3),      # dep count (resolved modulo idx)
@@ -224,6 +291,29 @@ def test_invariants_random_dags(recipe):
     recipe = normalize(recipe)
     rt, cluster, expected = run_recipe(recipe)
     assert_invariants(rt, cluster, expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(NODE, min_size=1, max_size=24))
+def test_capacity_invariants_random_dags(recipe):
+    """Universal capacity/eviction invariants over random tiered DAGs with
+    finite fast tiers and injected faults."""
+    recipe = normalize(recipe)
+    rt, cluster, _ = run_recipe(recipe, make=make_capacity_cluster)
+    assert_capacity_invariants(rt, cluster)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(NODE, min_size=2, max_size=16))
+def test_capacity_launch_order_deterministic(recipe):
+    """The lifecycle subsystem (evictions, auto-prefetch, penalties) keeps
+    two identical runs bit-identical."""
+    recipe = normalize(recipe)
+    log1 = run_recipe(recipe, make=make_capacity_cluster)[0] \
+        .scheduler.launch_log
+    log2 = run_recipe(recipe, make=make_capacity_cluster)[0] \
+        .scheduler.launch_log
+    assert log1 == log2
 
 
 @settings(max_examples=10, deadline=None)
