@@ -7,10 +7,13 @@ Public API (PyCOMPSs-flavoured, paper §4):
     IORuntime(cluster, backend)        master runtime (sim or real backend)
     wait_on(fut)                       compss_wait_on
 """
+from .autotune import DriftConfig
 from .backends import RealBackend, SimBackend
 from .constraints import AutoSpec, StaticSpec, parse_storage_bw
 from .datalife import (DataCatalog, DataObject, EvictionPolicy,
                        LifecycleConfig, LRUEviction, TierCapacity)
+from .interference import (Burst, BurstyTraffic, ConstantTraffic,
+                           InterferenceEngine, TraceTraffic, TrafficModel)
 from .resources import Cluster, StorageDevice, WorkerNode
 from .runtime import IORuntime, constraint, current_runtime, io, task, wait_on
 from .scheduler import SchedulerError
@@ -26,6 +29,8 @@ __all__ = [
     "IN", "INOUT", "OUT", "Direction", "DataHandle", "Future", "TaskState",
     "DataCatalog", "DataObject", "EvictionPolicy", "LifecycleConfig",
     "LRUEviction", "TierCapacity",
+    "Burst", "BurstyTraffic", "ConstantTraffic", "DriftConfig",
+    "InterferenceEngine", "TraceTraffic", "TrafficModel",
     "aggregate_throughput", "per_task_rate", "expected_task_time",
     "max_concurrent_tasks", "cross_tier_time", "read_floor_time",
 ]

@@ -82,6 +82,9 @@ class SimBackend(Backend):
         self.clock = 0.0
         self._compute: dict[int, tuple[TaskInstance, float]] = {}  # tid -> (task, end)
         self._io: dict[int, list] = {}  # tid -> [task, remaining_mb, min_end]
+        # co-tenant traffic (interference.py); None keeps every code path —
+        # and all arithmetic — identical to the interference-free simulator
+        self.interference = None
         self.io_busy_time = 0.0         # union over devices of I/O activity
         self.compute_busy_time = 0.0
         self.overlap_time = 0.0         # time with BOTH compute and I/O active
@@ -98,6 +101,16 @@ class SimBackend(Backend):
     def now(self) -> float:
         return self.clock
 
+    def attach_interference(self, engine) -> None:
+        """Bind an InterferenceEngine: burst boundaries become simulation
+        events, co-tenant streams join each device's congestion model."""
+        self.interference = engine if engine is not None and engine.active \
+            else None
+        if self.interference is not None:
+            # bursts starting at the current clock (t=0 co-tenants) must
+            # hold their budgets before the first schedule pass runs
+            self.interference.apply_due(self.clock)
+
     # ---------------------------------------------------------- event queue
     def _push_entry(self, tid: int, est: float) -> None:
         ver = self._entry_ver.get(tid, 0) + 1
@@ -107,7 +120,9 @@ class SimBackend(Backend):
     def _true_finish(self, rec: list) -> float:
         task, rem, min_end = rec
         dev = task.device or task.worker.storage
-        rate = per_task_rate(dev, dev.active_io)
+        # co-tenant streams share the device fairly (0 without interference:
+        # the arithmetic — and thus the golden launch log — is unchanged)
+        rate = per_task_rate(dev, dev.active_io + dev.background_streams)
         eta = self.clock + rem / rate if rate > 0 else float("inf")
         return max(eta, min_end)
 
@@ -195,7 +210,7 @@ class SimBackend(Backend):
         for rec in self._io.values():
             task, rem, _ = rec
             dev = task.device or task.worker.storage
-            rate = per_task_rate(dev, dev.active_io)
+            rate = per_task_rate(dev, dev.active_io + dev.background_streams)
             moved = min(rem, rate * dt)
             rec[1] = rem - moved
             dev.bytes_written += moved
@@ -250,10 +265,36 @@ class SimBackend(Backend):
         due_io.sort(key=lambda t: t._sim_seq)
         return due_c + due_io
 
+    #: in the nothing-running branch, at most this many consecutive burst
+    #: boundaries are stepped through looking for one that unblocks a grant
+    #: before the scheduler is declared stuck (bounds the wait on infinite
+    #: burst trains when the blockage is unrelated to interference)
+    _BG_STUCK_LIMIT = 512
+
+    def _bg_step(self, eng) -> bool:
+        """Advance the clock to the next co-tenant burst boundary and apply
+        it (nothing of ours is running). Returns True when a boundary was
+        applied — a burst end releases bandwidth/capacity that may unblock
+        a ready task; a burst start can push a tier over its watermark and
+        let the lifecycle tick make eviction progress."""
+        t = eng.next_time()
+        if t == float("inf"):
+            return False
+        if t > self.clock:
+            self._advance_to(t)
+        eng.apply_due(self.clock)
+        self._refresh_stale_devices()
+        self.runtime.scheduler._dirty = True
+        self.runtime._lifecycle_tick()
+        return True
+
     def drain(self, predicate: Callable[[], bool]) -> None:
         rt = self.runtime
+        eng = self.interference
+        bg_retries = 0
         while True:
-            rt.scheduler.schedule_pass()
+            if rt.scheduler.schedule_pass():
+                bg_retries = 0
             # no refresh needed here: launches only allocate (rates drop),
             # which leaves existing estimates as valid lower bounds
             if predicate():
@@ -265,14 +306,30 @@ class SimBackend(Backend):
                     # give the lifecycle a chance before declaring stuck
                     if rt._lifecycle_tick():
                         continue
-                    rt.scheduler.assert_not_stuck()
+                    # gentle unstick first (close partial learning epochs
+                    # and retry — the interference-free behaviour); only if
+                    # that still leaves nothing placeable may a co-tenant
+                    # burst be holding the budget/capacity: step to the
+                    # next burst boundary and try again
+                    try:
+                        rt.scheduler.assert_not_stuck()
+                    except SchedulerError:
+                        if eng is not None \
+                                and bg_retries < self._BG_STUCK_LIMIT \
+                                and self._bg_step(eng):
+                            bg_retries += 1
+                            continue
+                        raise
                     continue
                 if predicate():
                     return
                 raise SchedulerError(
                     f"simulation drained but predicate unmet "
                     f"(unfinished={rt.graph.unfinished})")
+            bg_retries = 0
             t = self._next_event_time()
+            if eng is not None:
+                t = min(t, eng.next_time())
             if t == float("inf"):
                 raise SchedulerError("no next event with tasks running")
             self._advance_to(t)
@@ -291,6 +348,12 @@ class SimBackend(Backend):
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
+            if eng is not None and eng.apply_due(self.clock):
+                # burst boundaries at this instant: budgets/rates changed —
+                # retry placement, and let a capacity burst that crossed a
+                # watermark trigger eviction planning
+                rt.scheduler._dirty = True
+                rt._lifecycle_tick()
             self._refresh_stale_devices()  # releases raised device rates
 
 

@@ -50,12 +50,18 @@ anywhere (and no explicit ``LifecycleConfig(enabled=True)``) the catalog
 stays disabled and the scheduler/simulator behave bit-identically to the
 capacity-less implementation — the golden-parity suite pins this.
 
-Limitations: auto-prefetch stages only inputs already resident at
-submission (a consumer submitted before its producer finishes is read-
-penalized from wherever the data lands, but not staged — see ROADMAP);
-under ``RealBackend`` eviction drains move catalog state, not files, since
-``DataObject`` carries no path — file movement stays with ``rt.drain(path=)``
-and the checkpoint manager.
+Pipelined prefetch: a consumer submitted *before* its producer finishes
+cannot know where the output will land, so it gets a **conditional**
+staging — a mover chained onto the producer's completion whose decision is
+made at registration time (``pipeline_prefetch``): if the output landed on
+a slower tier than the consumer's target, the mover becomes a real staging;
+otherwise it is neutralized into a zero-cost pass-through. Ephemeral
+objects (``rt.discard``): temp data provably never read again is deleted at
+eviction without the durable drain, freeing FS bandwidth.
+
+Limitations: under ``RealBackend`` eviction drains move catalog state, not
+files, since ``DataObject`` carries no path — file movement stays with
+``rt.drain(path=)`` and the checkpoint manager.
 """
 from __future__ import annotations
 
@@ -65,7 +71,7 @@ from typing import Callable, Optional
 
 from .resources import Cluster, StorageDevice
 from .storage_model import read_floor_time
-from .task import TaskInstance, TaskState
+from .task import TaskInstance, TaskState, TaskType
 
 
 def _validate_watermark(name: str, value: float) -> None:
@@ -118,6 +124,8 @@ class DataObject:
         self.pinned = pinned
         self.created = created
         self.last_use = created        # LRU clock: bumped by reader activity
+        self.ephemeral = False         # rt.discard: never read again, so
+        #                                eviction may delete without a drain
         self.residency: dict[str, StorageDevice] = {}  # tier -> device copy
         self.readers: set[int] = set()  # tids of scheduled/running readers
         self.reader_log: list[list] = []  # [tid, submit_t, end_t|None]
@@ -185,6 +193,12 @@ class LifecycleConfig:
 
     enabled: Optional[bool] = None
     auto_prefetch: bool = True
+    #: extend auto_prefetch to fully-async DAGs: a consumer submitted before
+    #: its producer finishes gets a conditional staging chained onto the
+    #: producer's completion (decided when the output's tier is known)
+    #: instead of silently skipping staging. Only meaningful with
+    #: auto_prefetch on.
+    pipeline_prefetch: bool = True
     auto_evict: bool = True
     high_watermark: float = 0.85
     low_watermark: float = 0.60
@@ -275,11 +289,19 @@ class DataCatalog:
         # object (external/resolved futures are not held by the graph)
         self._by_fut: dict[int, tuple] = {}
         self._pending_pins: set[int] = set()         # pinned-before-produced
+        self._pending_discards: set[int] = set()     # discarded-before-produced
         self._resident: dict[int, set] = {}          # id(device) -> objects
         self._evicting_mb: dict[int, float] = {}     # id(device) -> in-flight
+        # pipelined prefetch: consumers submitted before their producer
+        # finished register a *deferred* staging decision here, resolved at
+        # the producer's registration — id(producer_fut) -> (fut, {tier:
+        # mover_fut}); the future is retained so a reused id can't alias
+        self._deferred_stage: dict[int, tuple] = {}
         self.events: list[dict] = []                 # eviction audit log
         self.n_prefetches = 0
         self.n_evictions = 0
+        self.n_discards = 0
+        self.n_deferred_stages = 0
         self.bytes_evicted_mb = 0.0
         self.bytes_prefetched_mb = 0.0
 
@@ -292,6 +314,10 @@ class DataCatalog:
         if tc is not None:
             return tc.high_watermark, tc.low_watermark
         return self.config.high_watermark, self.config.low_watermark
+
+    #: public accessor (the scheduler's tier-choice objective prices the
+    #: eviction drain a watermark crossing would force)
+    watermarks = _watermarks
 
     def lookup_future(self, fut) -> Optional[DataObject]:
         entry = self._by_fut.get(id(fut))
@@ -362,6 +388,9 @@ class DataCatalog:
             if id(f) in self._pending_pins:
                 self._pending_pins.discard(id(f))
                 obj.pinned = True
+            if id(f) in self._pending_discards:
+                self._pending_discards.discard(id(f))
+                obj.ephemeral = True
         # readers submitted BEFORE the producer finished (pipelined DAGs)
         # could not be tracked at their submission — the object didn't exist
         # yet. Pick them up from the dependency graph now, so eviction can
@@ -381,6 +410,7 @@ class DataCatalog:
                             for f in iter_futures(arg))
                 if reads:
                     obj.begin_read(ctid, t)
+        self._resolve_deferred(task, obj, t)
         return obj
 
     def pin(self, fut_or_obj) -> Optional[DataObject]:
@@ -402,6 +432,22 @@ class DataCatalog:
             self._pending_pins.discard(id(fut_or_obj))
             return None
         obj.pinned = False
+        return obj
+
+    def discard(self, fut_or_obj) -> Optional[DataObject]:
+        """Ephemeral liveness signal (``rt.discard``): the caller promises
+        the datum will never be read again. Eviction may then *delete* the
+        object without the durable drain — temp data stops consuming FS
+        bandwidth on its way out. Outstanding scheduled readers are still
+        honoured (the evictable filter skips objects with readers).
+        Discarding before the producer finished defers the mark to
+        registration, like pin."""
+        obj = fut_or_obj if isinstance(fut_or_obj, DataObject) \
+            else self.lookup_future(fut_or_obj)
+        if obj is None:
+            self._pending_discards.add(id(fut_or_obj))
+            return None
+        obj.ephemeral = True
         return obj
 
     # -------------------------------------------------------- reader hooks
@@ -444,6 +490,12 @@ class DataCatalog:
         in_objs = self.input_objects(task)
         for obj in in_objs:
             obj.end_read(task.tid, t)
+        if failed:
+            # a failed/cancelled producer never registers: its deferred
+            # staging decisions die with it (the movers are its data-
+            # descendants and were cancelled by the same fan-out)
+            for f in task.futures:
+                self._deferred_stage.pop(id(f), None)
         tag = getattr(task, "_datalife", None)
         if tag is not None:
             kind, obj = tag[0], tag[1]
@@ -491,6 +543,75 @@ class DataCatalog:
         obj.staging.pop(tier, None)
         if not failed and task.device is not None:
             self._add_residency(obj, task.device)
+
+    # ------------------------------------- prefetch under producer pipelining
+    def wants_deferred_stage(self, fut, target_tier: str) -> bool:
+        """Should a consumer of the not-yet-finished producer behind ``fut``
+        get a *conditional* staging chained onto the producer's completion?
+        Only for pending I/O producers with a real output footprint that
+        could ever fit the target tier — whether staging is actually useful
+        is unknowable until the producer's output lands somewhere, which is
+        exactly why the decision is deferred."""
+        if target_tier not in self._rank:
+            return False
+        t = getattr(fut, "task", None)
+        if t is None or t.state in (TaskState.DONE, TaskState.FAILED):
+            return False  # resolved or doomed: nothing to defer
+        if t.defn.task_type != TaskType.IO or t.sim.io_bytes <= 0:
+            return False
+        if t.defn.signature in ("tier_drain", "tier_prefetch"):
+            return False  # movers move data; they are never staged
+        return any(d.tier == target_tier and
+                   (d.capacity_mb is None or t.sim.io_bytes <= d.capacity_mb)
+                   for d in self.cluster.devices)
+
+    def deferred_stage_future(self, fut, tier: str):
+        """The already-minted conditional mover for ``fut``→``tier``, if
+        any — every pipelined reader of the same pending output rides the
+        same mover."""
+        entry = self._deferred_stage.get(id(fut))
+        return entry[1].get(tier) if entry is not None else None
+
+    def begin_deferred_stage(self, fut, tier: str, mover_fut) -> None:
+        entry = self._deferred_stage.get(id(fut))
+        if entry is None:
+            entry = self._deferred_stage[id(fut)] = (fut, {})
+        entry[1][tier] = mover_fut
+        self.n_deferred_stages += 1
+
+    def _resolve_deferred(self, task: TaskInstance, obj: DataObject,
+                          t: float) -> None:
+        """The producer registered: decide each deferred staging now. A
+        useful mover becomes a real staging (source tier known at last);
+        a useless one — the output already landed on a tier at least as
+        fast as the target — is neutralized into a zero-cost pass-through
+        so its consumers release immediately."""
+        for f in task.futures:
+            entry = self._deferred_stage.pop(id(f), None)
+            if entry is None:
+                continue
+            for tier, mover_fut in entry[1].items():
+                mover = mover_fut.task
+                self.map_future(mover_fut, obj)
+                # consumers were submitted before the object existed: they
+                # depend on the mover — pick them up as readers so eviction
+                # can never select the object out from under them
+                if self.graph is not None:
+                    for ctid in mover.children:
+                        child = self.graph.tasks.get(ctid)
+                        if child is not None and child.state not in (
+                                TaskState.DONE, TaskState.FAILED):
+                            obj.begin_read(ctid, t)
+                if self.wants_stage(obj, tier):
+                    src = obj.fastest_tier(self.tier_rank)
+                    src_dev = self.cluster.tier_spec(src) if src else None
+                    mover.sim.io_bytes = obj.size_mb
+                    mover.sim.duration = read_floor_time(
+                        src_dev, obj.size_mb) if src_dev is not None else 0.0
+                    self.begin_stage(obj, tier, mover_fut)
+                else:
+                    mover.sim.io_bytes = 0.0
+                    mover.sim.duration = 0.0
 
     def wants_stage(self, obj: DataObject, target_tier: str) -> bool:
         """Is a prefetch of ``obj`` up to ``target_tier`` useful? Only when
@@ -556,15 +677,23 @@ class DataCatalog:
                 self._evicting_mb[id(dev)] = \
                     self._evicting_mb.get(id(dev), 0.0) + obj.size_mb
                 durable = self.durable_tier in obj.residency
+                # ephemeral objects (rt.discard) skip the durable drain:
+                # nobody will ever read them, so deletion is free — no FS
+                # bandwidth spent writing back data on its way out
                 actions.append(EvictionAction(
                     obj=obj, device=dev,
-                    drain_to=None if durable else self.durable_tier))
+                    drain_to=None if durable or obj.ephemeral
+                    else self.durable_tier))
         return actions
 
     def drop_now(self, obj: DataObject, dev: StorageDevice) -> None:
-        """Immediate delete of a copy that already has a durable sibling."""
-        assert self.durable_tier in obj.residency, obj
-        self._record_eviction(obj, dev, mode="drop")
+        """Immediate delete of a copy that has a durable sibling — or of an
+        ephemeral object (rt.discard), which needs none."""
+        assert obj.ephemeral or self.durable_tier in obj.residency, obj
+        if obj.ephemeral:
+            self.n_discards += 1
+        self._record_eviction(
+            obj, dev, mode="discard" if obj.ephemeral else "drop")
         dev.free_capacity(obj.size_mb)
         self._drop_residency(obj, dev)
         self._evicting_mb[id(dev)] = max(
@@ -597,6 +726,7 @@ class DataCatalog:
             "selected_at": getattr(obj, "_selected_at", self.now()),
             "durable": self.durable_tier in obj.residency,
             "pinned": obj.pinned,
+            "ephemeral": obj.ephemeral,
         })
 
     # ------------------------------------------------------------- summary
@@ -605,7 +735,9 @@ class DataCatalog:
             "enabled": self.enabled,
             "n_objects": len(self.objects),
             "n_prefetches": self.n_prefetches,
+            "n_deferred_stages": self.n_deferred_stages,
             "n_evictions": self.n_evictions,
+            "n_discards": self.n_discards,
             "bytes_prefetched_mb": self.bytes_prefetched_mb,
             "bytes_evicted_mb": self.bytes_evicted_mb,
             "occupancy": {

@@ -80,6 +80,13 @@ class StorageDevice:
         self.used_mb: float = 0.0        # committed resident bytes (MB)
         self.reserved_mb: float = 0.0    # in-flight writer reservations (MB)
         self.peak_occupancy_mb: float = 0.0  # high-water mark of used+reserved
+        # --- co-tenant (background) traffic state (interference.py) ---
+        # Background streams share the congestion model fairly with our
+        # tasks; background bandwidth/capacity claims are clamped to the
+        # free budget so a co-tenant can never over-commit the device.
+        self.background_streams: int = 0
+        self.background_bw: float = 0.0  # MB/s currently held by co-tenants
+        self.background_mb: float = 0.0  # capacity currently held (MB)
 
     # -- budget accounting (scheduler-facing) --------------------------------
     def can_allocate(self, bw: float) -> bool:
@@ -101,6 +108,57 @@ class StorageDevice:
         if self.active_io < 0 or self.available_bw > self.bandwidth + 1e-6:
             raise RuntimeError(f"bandwidth accounting underflow on {self.name}")
 
+    # -- co-tenant (background) traffic (interference.py) --------------------
+    def add_background(self, streams: int, bw: float) -> float:
+        """A co-tenant burst arrives: it joins the congestion model with
+        ``streams`` fair-share streams and takes up to ``bw`` MB/s out of
+        the allocatable budget — clamped to what is actually free, so the
+        scheduler's own grants are never invalidated. Returns the bandwidth
+        actually taken (pass it back to :meth:`remove_background`)."""
+        taken = min(max(bw, 0.0), self.available_bw)
+        self.available_bw -= taken
+        self.background_bw += taken
+        self.background_streams += max(int(streams), 0)
+        self.rate_epoch += 1
+        return taken
+
+    def remove_background(self, streams: int, bw_taken: float) -> None:
+        """The burst ends: streams leave and the taken bandwidth returns.
+        A departure raises per-task rates, so the release epoch bumps (the
+        simulator refreshes its finish-time lower bounds on it)."""
+        self.available_bw += bw_taken
+        self.background_bw -= bw_taken
+        self.background_streams -= max(int(streams), 0)
+        self.rate_epoch += 1
+        self.release_epoch += 1
+        if self.background_streams < 0 or self.background_bw < -1e-6 \
+                or self.available_bw > self.bandwidth + 1e-6:
+            raise RuntimeError(
+                f"background traffic accounting underflow on {self.name}")
+
+    def add_background_capacity(self, mb: float) -> float:
+        """A co-tenant fills capacity (e.g. its own checkpoints landing on
+        the shared burst buffer). Clamped to the free space — the co-tenant
+        cannot overfill the device, but by shrinking free capacity it can
+        push occupancy over the eviction watermarks and capacity-block our
+        grants. Returns the MB actually taken."""
+        if self.capacity_gb is None or mb <= 0:
+            return 0.0
+        taken = min(mb, self.free_capacity_mb())
+        if taken <= 0:
+            return 0.0
+        self.background_mb += taken
+        self.peak_occupancy_mb = max(self.peak_occupancy_mb, self.occupancy_mb)
+        return taken
+
+    def remove_background_capacity(self, mb_taken: float) -> None:
+        if mb_taken <= 0:
+            return
+        self.background_mb -= mb_taken
+        if self.background_mb < -1e-6:
+            raise RuntimeError(
+                f"background capacity underflow on {self.name}")
+
     # -- capacity occupancy (data lifecycle; see datalife.py) ----------------
     @property
     def capacity_mb(self) -> Optional[float]:
@@ -108,8 +166,8 @@ class StorageDevice:
 
     @property
     def occupancy_mb(self) -> float:
-        """Committed + in-flight-reserved occupancy (MB)."""
-        return self.used_mb + self.reserved_mb
+        """Committed + in-flight-reserved + co-tenant occupancy (MB)."""
+        return self.used_mb + self.reserved_mb + self.background_mb
 
     def free_capacity_mb(self) -> float:
         cap = self.capacity_mb
@@ -167,6 +225,9 @@ class StorageDevice:
         self.used_mb = 0.0
         self.reserved_mb = 0.0
         self.peak_occupancy_mb = 0.0
+        self.background_streams = 0
+        self.background_bw = 0.0
+        self.background_mb = 0.0
 
 
 @dataclass

@@ -48,9 +48,11 @@ import shutil
 import threading
 from typing import Optional
 
+from .autotune import DriftConfig
 from .backends import Backend, RealBackend, SimBackend
 from .constraints import parse_storage_bw
 from .datalife import DataCatalog, LifecycleConfig
+from .interference import InterferenceEngine
 from .graph import TaskGraph, _param_names
 from .resources import Cluster
 from .scheduler import Scheduler
@@ -225,13 +227,29 @@ class IORuntime:
     a fast tier synthesizes eviction tasks (drain-then-delete of cold
     objects), and tasks whose tracked inputs live only on a slower tier get
     an automatic ``rt.prefetch`` staged in front of them (the CkIO read
-    pipeline). With no finite capacity the subsystem is inert and the
-    runtime behaves exactly as before.
+    pipeline) — including consumers submitted before their producer
+    finished, via a conditional mover decided at the producer's completion
+    (``pipeline_prefetch``). ``rt.discard(fut)`` marks temp data ephemeral
+    so eviction deletes it without the durable drain. With no finite
+    capacity the subsystem is inert and the runtime behaves exactly as
+    before.
+
+    Co-tenant interference (``interference=``, see interference.py and
+    docs/interference.md): background traffic models injected into shared-
+    tier devices (SimBackend only). ``drift=DriftConfig(...)`` arms the
+    autotuners with a stale-curve detector that re-enters calibration on
+    the live device; ``tier_objective=True`` turns the fastest-with-budget
+    walk for tier-agnostic auto tasks into a measured argmin over the
+    learned per-tier T(n, c) curves, priced with forced-eviction drains.
+    All three default off and leave behaviour bit-identical.
     """
 
     def __init__(self, cluster: Cluster, backend: Backend | str = "sim",
                  scheduler_cls=Scheduler,
-                 lifecycle: Optional[LifecycleConfig] = None):
+                 lifecycle: Optional[LifecycleConfig] = None,
+                 interference=None,
+                 drift: Optional[DriftConfig] = None,
+                 tier_objective: bool = False):
         self.cluster = cluster
         if isinstance(backend, str):
             backend = SimBackend() if backend == "sim" else RealBackend()
@@ -239,6 +257,26 @@ class IORuntime:
         self.lock = threading.RLock()
         self.graph = TaskGraph()
         self.scheduler = scheduler_cls(cluster, launch=self.backend.launch)
+        if drift is not None or tier_objective:
+            set_tuning = getattr(self.scheduler, "set_tuning", None)
+            if set_tuning is not None:
+                set_tuning(drift=drift, tier_objective=tier_objective)
+        # co-tenant interference (interference.py): an InterferenceEngine,
+        # or an iterable of (tier-or-device, TrafficModel) pairs. Simulation
+        # only — a real cluster injects its own co-tenants.
+        self.interference = None
+        if interference is not None:
+            engine = interference if isinstance(interference,
+                                                InterferenceEngine) \
+                else InterferenceEngine(list(interference), cluster)
+            if engine.active:
+                if not isinstance(backend, SimBackend):
+                    raise ValueError(
+                        "interference injection models co-tenant traffic in "
+                        "the simulator; it is not supported on "
+                        f"{type(backend).__name__}")
+                backend.attach_interference(engine)
+                self.interference = engine
         self.catalog = DataCatalog(cluster, lifecycle, now=self.backend.now)
         self.catalog.graph = self.graph
         if self.catalog.enabled:
@@ -324,6 +362,19 @@ class IORuntime:
                                            io_mb=obj.size_mb)
                         cat.begin_stage(obj, target, pf)
                     return pf
+                if obj is None and cat.config.pipeline_prefetch:
+                    # producer pipelining: the input's producer has not
+                    # finished, so where its output will live is unknown —
+                    # chain a *conditional* staging onto the producer's
+                    # completion (decided at registration; a useless mover
+                    # is neutralized into a zero-cost pass-through)
+                    pf = cat.deferred_stage_future(a, target)
+                    if pf is None and cat.wants_deferred_stage(a, target):
+                        pf = self.prefetch(a, to_tier=target,
+                                           io_mb=a.task.sim.io_bytes)
+                        cat.begin_deferred_stage(a, target, pf)
+                    if pf is not None:
+                        return pf
                 return a
             if depth < 4:
                 if isinstance(a, list):
@@ -422,6 +473,20 @@ class IORuntime:
     def unpin(self, fut) -> None:
         with self.lock:
             self.catalog.unpin(fut)
+
+    def discard(self, fut) -> None:
+        """Ephemeral liveness signal: the future's tracked data object will
+        never be read again, so eviction may delete it *without* the
+        durable drain (no FS bandwidth spent writing temp data back on its
+        way out). Scheduled readers already in the graph are still
+        honoured. Discarding before the producer finishes defers the mark
+        to registration."""
+        if not self.catalog.enabled:
+            raise RuntimeError(
+                "discard requires the data lifecycle subsystem: give a tier "
+                "a finite capacity_gb or pass LifecycleConfig(enabled=True)")
+        with self.lock:
+            self.catalog.discard(fut)
 
     # ----------------------------------------------------- tier data movement
     def drain(self, data, to_tier: str, from_tier: Optional[str] = None,
@@ -546,6 +611,8 @@ class IORuntime:
         }
         if self.catalog.enabled:
             out["lifecycle"] = self.catalog.summary()
+        if self.interference is not None:
+            out["interference"] = self.interference.summary()
         be = self.backend
         if isinstance(be, SimBackend):
             out.update({

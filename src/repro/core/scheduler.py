@@ -42,9 +42,10 @@ import itertools
 from collections import deque
 from typing import Callable, Iterable, Optional
 
-from .autotune import AutoTuner
+from .autotune import AutoTuner, DriftConfig
 from .constraints import AutoSpec, StaticSpec, is_auto
 from .resources import Cluster, StorageDevice, WorkerNode
+from .storage_model import cross_tier_time
 from .task import Future, TaskInstance, TaskState, TaskType
 
 
@@ -84,6 +85,24 @@ class Scheduler:
         # enabled catalog — the capacity-less hot path stays untouched
         self.catalog = None
         self.capacity_blocked: dict[int, float] = {}  # id(dev) -> wanted MB
+        # tuning extensions (interference.py / autotune.DriftConfig): both
+        # default off, leaving the paper's placement byte-identical
+        self.drift_config: Optional[DriftConfig] = None
+        self.tier_objective = False
+        self._probe_counts: dict[str, int] = {}  # sig -> steady grants (the
+        #                                          cross-tier probe clock)
+
+    def set_tuning(self, drift: Optional[DriftConfig] = None,
+                   tier_objective: bool = False) -> None:
+        """Wire the interference-era tuning extensions (runtime calls this):
+        ``drift`` makes every AutoTuner monitor observed-vs-predicted task
+        times and re-enter calibration when the curve goes stale;
+        ``tier_objective`` turns the fastest-with-budget walk for
+        tier-agnostic auto tasks into a measured decision across the
+        learned per-tier T(n, c) curves, priced with the eviction drain a
+        nearly-full fast tier would force."""
+        self.drift_config = drift
+        self.tier_objective = bool(tier_objective)
 
     def set_catalog(self, catalog) -> None:
         """Wire the data catalog (runtime calls this when the lifecycle
@@ -125,10 +144,13 @@ class Scheduler:
 
     def tuner_for(self, task: TaskInstance,
                   node: Optional[WorkerNode] = None) -> AutoTuner:
-        tier = task.tier
-        key = self._tuner_key(task.defn.signature, tier)
+        return self._make_tuner(
+            self._tuner_key(task.defn.signature, task.tier),
+            task.storage_bw, node, task.tier)
+
+    def _make_tuner(self, key: str, spec, node: Optional[WorkerNode],
+                    tier: Optional[str]) -> AutoTuner:
         if key not in self.tuners:
-            spec = task.storage_bw
             assert isinstance(spec, AutoSpec)
             # the device model the tuner reasons about: the tier device of
             # the active-learning node its epochs actually run on (falls back
@@ -137,7 +159,7 @@ class Scheduler:
             dev = self._tier_on(w, tier) or w.storage
             self.tuners[key] = AutoTuner(
                 key, spec, device_bw=dev.bandwidth,
-                io_executors=w.io_executors)
+                io_executors=w.io_executors, drift=self.drift_config)
         return self.tuners[key]
 
     def _acquire_learning_node(self, key: str,
@@ -414,36 +436,36 @@ class Scheduler:
         self._start(task, w, bw=bw, device=dev)
         return True
 
-    def _place_auto_io(self, task: TaskInstance) -> bool:
-        sig = task.defn.signature
-        tier = task.tier
-        key = self._tuner_key(sig, tier)
-        tuner = self.tuners.get(key)
-        if tuner is None or tuner.learning():
-            node = self._acquire_learning_node(key, tier)
-            if node is None:
-                return False
-            dev = self._tier_on(node, tier)
-            if tuner is None:
-                # the tuner models the device it actually learns on
-                tuner = self.tuner_for(task, node)
-            c = tuner.current_constraint()
-            if node.free_io_executors <= 0 or not dev.can_allocate(c):
-                return False
-            if not self._capacity_ok(task, dev):
-                return False
-            if not tuner.admit():
-                return False  # current epoch full; wait for the next one
-            node.free_io_executors -= 1
-            dev.allocate(c)
-            self._reserve_capacity(task, dev)
-            task.epoch = tuner.epoch
-            self._start(task, node, bw=c, device=dev)
-            return True
-        # learning done: objective fn, re-evaluated for the current backlog
-        # of THIS (signature, tier) — not siblings targeting other tiers
-        n = self.n_ready_of(key)
-        c = tuner.peek_choice(max(1, n))
+    def _learning_grant(self, task: TaskInstance, key: str,
+                        tier: Optional[str]) -> bool:
+        """Admit the task into ``key``'s current learning epoch on that
+        tuner's dedicated active-learning node (paper §4.2.3B)."""
+        node = self._acquire_learning_node(key, tier)
+        if node is None:
+            return False
+        dev = self._tier_on(node, tier)
+        # the tuner models the device it actually learns on
+        tuner = self._make_tuner(key, task.storage_bw, node, tier)
+        c = tuner.current_constraint()
+        if node.free_io_executors <= 0 or not dev.can_allocate(c):
+            return False
+        if not self._capacity_ok(task, dev):
+            return False
+        if not tuner.admit():
+            return False  # current epoch full; wait for the next one
+        node.free_io_executors -= 1
+        dev.allocate(c)
+        self._reserve_capacity(task, dev)
+        task.epoch = tuner.epoch
+        task.tuner_key = key
+        self._start(task, node, bw=c, device=dev)
+        return True
+
+    def _steady_grant(self, task: TaskInstance, key: str,
+                      tier: Optional[str], tuner: AutoTuner,
+                      c: float) -> bool:
+        """Place a steady-phase auto task under constraint ``c`` on the
+        first candidate worker with budget on ``tier``."""
         for w in self._io_candidates(task):
             if w.learning_owner is not None:
                 continue
@@ -458,9 +480,100 @@ class Scheduler:
             dev.allocate(c)
             self._reserve_capacity(task, dev)
             tuner.record_choice(c)
+            task.tuner_key = key
             self._start(task, w, bw=c, device=dev)
             return True
         return False
+
+    def _place_auto_io(self, task: TaskInstance) -> bool:
+        sig = task.defn.signature
+        tier = task.tier
+        if self.tier_objective and tier is None and self._tier_depth > 1:
+            return self._place_auto_io_cross_tier(task)
+        key = self._tuner_key(sig, tier)
+        tuner = self.tuners.get(key)
+        if tuner is None or tuner.learning():
+            return self._learning_grant(task, key, tier)
+        # learning done: objective fn, re-evaluated for the current backlog
+        # of THIS (signature, tier) — not siblings targeting other tiers
+        n = self.n_ready_of(key)
+        c = tuner.peek_choice(max(1, n))
+        return self._steady_grant(task, key, tier, tuner, c)
+
+    def _place_auto_io_cross_tier(self, task: TaskInstance) -> bool:
+        """Measured tier choice for tier-agnostic auto tasks: calibrate a
+        tuner per tier (hierarchy order, one at a time), then compare the
+        learned T(n, c) curves across tiers — plus the eviction-drain price
+        of writing to a nearly-full tier — and place on the argmin. Under
+        interference each tier's *effective* curve differs from its
+        nameplate ordering, so the walk is a measurement, not a heuristic;
+        drifted tuners re-enter calibration and the ranking follows."""
+        sig = task.defn.signature
+        tiers = self.cluster.tier_names()
+        # phase 1: the first tier whose curve is unlearned (or stale —
+        # drift re-entered calibration) learns next; one tier at a time so
+        # learning-node isolation is per-device, not cluster-wide
+        for tier in tiers:
+            key = self._tuner_key(sig, tier)
+            tuner = self.tuners.get(key)
+            if tuner is None or tuner.learning():
+                return self._learning_grant(task, key, tier)
+        # phase 2: every tier measured — argmin of backlog completion time
+        n = max(1, self.n_ready_of(self._sig_key(task)))
+        ranked = []
+        for ti, tier in enumerate(tiers):
+            key = self._tuner_key(sig, tier)
+            tuner = self.tuners[key]
+            c = tuner.peek_choice(n)
+            t_est = tuner.objective_time(n, c) \
+                + self._eviction_price(tier, task.sim.io_bytes)
+            ranked.append((t_est, ti, c, tier, key, tuner))
+        ranked.sort(key=lambda r: (r[0], r[1]))  # ties: faster tier wins
+        # re-probe: a tier the argmin abandons stops producing observations,
+        # so a stale-pessimistic curve could lock it out even after its
+        # co-tenant leaves. With drift monitoring on, every Nth steady grant
+        # goes to the runner-up instead — a deterministic exploration beat
+        # that keeps every arm's curve fresh enough to drift back. The beat
+        # counts *grants*, not attempts: a blocked class head is retried on
+        # every round, and burning beats on failures would starve the probe
+        # exactly when congestion makes it matter.
+        if self.drift_config is not None and len(ranked) > 1 and \
+                (self._probe_counts.get(sig, 0) + 1) \
+                % self.drift_config.probe_every == 0:
+            ranked[0], ranked[1] = ranked[1], ranked[0]
+        for _, _, c, tier, key, tuner in ranked:
+            if self._steady_grant(task, key, tier, tuner, c):
+                if self.drift_config is not None:
+                    self._probe_counts[sig] = \
+                        self._probe_counts.get(sig, 0) + 1
+                return True
+        return False
+
+    def _eviction_price(self, tier: str, io_mb: float) -> float:
+        """The drain cost a write of ``io_mb`` to ``tier`` would force: if
+        the projected occupancy of the tier's representative device crosses
+        its high watermark, the spill back down to the low watermark is a
+        cross-tier move to the durable tier — time the objective must pay
+        for choosing this tier. Zero without the lifecycle subsystem (no
+        finite capacity means no eviction ever)."""
+        if self.catalog is None or io_mb <= 0:
+            return 0.0
+        dev = self.cluster.tier_spec(tier)
+        if dev is None or dev.capacity_mb is None:
+            return 0.0
+        durable = self.catalog.durable_tier
+        if durable is None or durable == tier:
+            return 0.0
+        dst = self.cluster.tier_spec(durable)
+        if dst is None:
+            return 0.0
+        hi, lo = self.catalog.watermarks(dev)
+        cap = dev.capacity_mb
+        projected = dev.occupancy_mb + io_mb
+        if projected <= hi * cap:
+            return 0.0
+        spill = projected - lo * cap
+        return cross_tier_time(dev, dst, spill)
 
     def _io_candidates(self, task: TaskInstance):
         # shared working directory -> first candidate node (paper §4.2.1);
@@ -512,11 +625,22 @@ class Scheduler:
                 else:
                     dev.commit_capacity(task.reserved_mb)
         if task.epoch is not None:
-            key = self._tuner_key(task.defn.signature, task.tier)
+            # the grant recorded which (signature, tier) tuner admitted it —
+            # under the cross-tier objective a tier-agnostic task may have
+            # calibrated any tier's curve (fallback: recompute, for A/B
+            # scheduler shims that predate tuner_key)
+            key = task.tuner_key or self._tuner_key(
+                task.defn.signature, task.tier)
             tuner = self.tuners[key]
             tuner.on_task_complete(task.duration)
             if not tuner.learning():
                 self._release_learning_node(key)
+        elif self.drift_config is not None and task.tuner_key is not None:
+            # steady-phase drift feedback: compare the observed task time
+            # against the learned curve; the tuner may re-enter calibration
+            tuner = self.tuners.get(task.tuner_key)
+            if tuner is not None:
+                tuner.observe(task.granted_bw, task.duration)
         self.completed.append(task)
         self._dirty = True  # a resource was freed (and maybe an epoch advanced)
 

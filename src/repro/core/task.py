@@ -147,6 +147,11 @@ class TaskInstance:
         self.device = None                   # StorageDevice the I/O was
         #                                      granted on (a tier of .worker)
         self.granted_bw: float = 0.0         # bandwidth reserved at launch
+        self.tuner_key: Optional[str] = None  # the (signature, tier) tuner
+        #                                      this grant drew from — under
+        #                                      the measured tier objective a
+        #                                      tier-agnostic task may be
+        #                                      granted on any tier's tuner
         self.reserved_mb: float = 0.0        # capacity reserved at grant on
         #                                      .device (commit-at-finish)
         self.read_penalty: float = 0.0       # simulated input-read floor

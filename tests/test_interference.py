@@ -1,0 +1,570 @@
+"""Interference subsystem tests (ISSUE 4): co-tenant traffic models,
+drift-adaptive autotuning, the measured tier-choice objective, ephemeral
+objects and pipelined conditional prefetch."""
+import itertools
+
+import pytest
+
+from repro.core import (Burst, BurstyTraffic, Cluster, ConstantTraffic,
+                        DriftConfig, InterferenceEngine, IORuntime,
+                        LifecycleConfig, RealBackend, SimBackend,
+                        StorageDevice, TraceTraffic, WorkerNode, constraint,
+                        io, task)
+from repro.core.autotune import AutoTuner, Phase
+from repro.core.constraints import parse_storage_bw
+from repro.core.task import TaskInstance
+
+
+def _fresh_tids():
+    TaskInstance._ids = itertools.count()
+
+
+# ------------------------------------------------------------ traffic models
+def test_burst_validation():
+    with pytest.raises(ValueError):
+        Burst(start=-1.0, duration=1.0)
+    with pytest.raises(ValueError):
+        Burst(start=0.0, duration=0.0)
+    with pytest.raises(ValueError):
+        Burst(start=0.0, duration=1.0, bw=-5.0)
+
+
+def test_bursty_traffic_is_seed_deterministic():
+    a = list(itertools.islice(
+        BurstyTraffic(seed=11, on_mean=2.0, off_mean=3.0, bw=50.0).bursts(),
+        20))
+    b = list(itertools.islice(
+        BurstyTraffic(seed=11, on_mean=2.0, off_mean=3.0, bw=50.0).bursts(),
+        20))
+    c = list(itertools.islice(
+        BurstyTraffic(seed=12, on_mean=2.0, off_mean=3.0, bw=50.0).bursts(),
+        20))
+    assert a == b
+    assert a != c
+    for burst in a:
+        assert burst.duration > 0 and burst.start >= 0
+
+
+def test_bursty_traffic_until_truncates():
+    bursts = list(BurstyTraffic(seed=3, on_mean=5.0, off_mean=1.0,
+                                until=20.0).bursts())
+    assert bursts, "a 20s horizon with 1s mean gaps must produce bursts"
+    for b in bursts:
+        assert b.start < 20.0
+        assert b.start + b.duration <= 20.0 + 1e-9
+
+
+def test_trace_traffic_jsonl_roundtrip():
+    lines = [
+        '# co-tenant checkpoint wave',
+        '{"t": 10.0, "dur": 5.0, "streams": 32, "bw": 400.0}',
+        '{"t": 2.0, "dur": 1.0, "capacity_mb": 64.0}',
+        '',
+    ]
+    tm = TraceTraffic.from_jsonl(lines)
+    bursts = list(tm.bursts())
+    assert [b.start for b in bursts] == [2.0, 10.0]  # replay by start time
+    assert bursts[1].streams == 32 and bursts[1].bw == 400.0
+    assert bursts[0].capacity_mb == 64.0
+
+
+def test_trace_traffic_rejects_bad_lines():
+    with pytest.raises(ValueError, match="invalid JSON"):
+        TraceTraffic.from_jsonl(['not json'])
+    with pytest.raises(ValueError, match="'t' and 'dur'"):
+        TraceTraffic.from_jsonl(['{"dur": 1.0}'])
+
+
+def test_engine_applies_end_before_start_at_equal_time():
+    """Back-to-back bursts across models hand the budget over cleanly: the
+    end of one burst applies before a start at the same timestamp, so the
+    incoming burst is not clamped against budget the outgoing one held."""
+    cluster = Cluster.make_tiered(n_workers=1, fs_bw=120.0)
+    fs = [d for d in cluster.devices if d.tier == "fs"][0]
+    eng = InterferenceEngine(
+        [("fs", ConstantTraffic(streams=2, bw=120.0, start=0.0, until=10.0)),
+         ("fs", ConstantTraffic(streams=3, bw=100.0, start=10.0,
+                                until=20.0))], cluster)
+    eng.apply_due(0.0)
+    assert fs.background_bw == pytest.approx(120.0)
+    eng.apply_due(10.0)
+    assert fs.background_streams == 3
+    assert fs.background_bw == pytest.approx(100.0), \
+        "the t=10 start must see the t=10 end's freed budget"
+    eng.apply_due(20.0)
+    assert fs.background_bw == 0.0 and fs.background_streams == 0
+
+
+def test_engine_rejects_unknown_target_and_bad_model():
+    cluster = Cluster.make_tiered(n_workers=1)
+    with pytest.raises(ValueError, match="matches no tier or device"):
+        InterferenceEngine([("nvram", ConstantTraffic(bw=1.0))], cluster)
+    with pytest.raises(TypeError, match="TrafficModel"):
+        InterferenceEngine([("bb", object())], cluster)
+
+
+def test_real_backend_refuses_interference():
+    cluster = Cluster.make_tiered(n_workers=1)
+    with pytest.raises(ValueError, match="simulator"):
+        IORuntime(cluster, backend=RealBackend(),
+                  interference=[("bb", ConstantTraffic(streams=1))])
+
+
+# --------------------------------------------------- clamping (device level)
+def test_background_bandwidth_clamped_to_free_budget():
+    dev = StorageDevice(name="d", bandwidth=100.0)
+    dev.allocate(80.0)
+    taken = dev.add_background(4, 50.0)  # only 20 free
+    assert taken == pytest.approx(20.0)
+    assert dev.available_bw == pytest.approx(0.0)
+    assert dev.background_streams == 4
+    dev.remove_background(4, taken)
+    assert dev.available_bw == pytest.approx(20.0)
+    assert dev.background_streams == 0
+    dev.release(80.0)
+    assert dev.available_bw == pytest.approx(dev.bandwidth)
+
+
+def test_background_capacity_clamped_to_free_space():
+    dev = StorageDevice(name="d", bandwidth=100.0, capacity_gb=1.0)  # 1024 MB
+    dev.reserve_capacity(1000.0)
+    taken = dev.add_background_capacity(500.0)
+    assert taken == pytest.approx(24.0)
+    assert dev.occupancy_mb <= dev.capacity_mb + 1e-9
+    dev.remove_background_capacity(taken)
+    assert dev.background_mb == 0.0
+    # unlimited devices never hold background capacity
+    d2 = StorageDevice(name="u", bandwidth=100.0)
+    assert d2.add_background_capacity(500.0) == 0.0
+
+
+# ------------------------------------------------------- simulator semantics
+def _tiny_cluster():
+    return Cluster.make_tiered(n_workers=2, cpus=4, io_executors=8,
+                               fs_bw=120.0, fs_stream_cap=8.0)
+
+
+def _run_static(interf, n=6):
+    _fresh_tids()
+    cluster = _tiny_cluster()
+    with IORuntime(cluster, backend=SimBackend(),
+                   interference=interf) as rt:
+        @io
+        @task()
+        def wr(i):
+            pass
+        for i in range(n):
+            wr(i, io_mb=40.0, storage_bw=16.0, storage_tier="fs")
+        rt.barrier(final=True)
+        return rt.stats()["makespan"], list(rt.scheduler.launch_log)
+
+
+def test_empty_engine_is_bit_identical():
+    m0, log0 = _run_static(None)
+    m1, log1 = _run_static([])
+    assert m0 == m1 and log0 == log1
+
+
+def test_interference_slows_the_interfered_tier():
+    m0, _ = _run_static(None)
+    m1, _ = _run_static([("fs", ConstantTraffic(streams=20, bw=60.0))])
+    assert m1 > m0
+
+
+def test_same_seed_same_trace_bit_identical():
+    mk = lambda: [("fs", BurstyTraffic(seed=7, on_mean=2.0, off_mean=2.0,
+                                       streams=30, bw=80.0))]
+    m1, log1 = _run_static(mk())
+    m2, log2 = _run_static(mk())
+    assert m1 == m2 and log1 == log2
+
+
+def test_background_bw_claim_blocks_then_releases_grant():
+    """A task whose constraint exceeds the co-tenant-free budget waits for
+    the burst to end instead of being declared stuck."""
+    _fresh_tids()
+    cluster = _tiny_cluster()
+    burst = ConstantTraffic(streams=1, bw=110.0, until=5.0)  # fs has 120
+    with IORuntime(cluster, backend=SimBackend(),
+                   interference=[("fs", burst)]) as rt:
+        @io
+        @task()
+        def wr(i):
+            pass
+        wr(0, io_mb=10.0, storage_bw=100.0, storage_tier="fs")
+        rt.barrier(final=True)
+        launched_at = [t.start_time for t in rt.scheduler.completed]
+    assert launched_at and launched_at[0] >= 5.0
+
+
+def test_capacity_interference_triggers_eviction():
+    _fresh_tids()
+    fs = StorageDevice(name="fs", bandwidth=300.0, per_stream_cap=50.0,
+                       tier="fs")
+    bb = StorageDevice(name="bb", bandwidth=2000.0, per_stream_cap=400.0,
+                       tier="bb", capacity_gb=1.0)
+    cluster = Cluster(workers=[WorkerNode(
+        name="w0", cpus=8, io_executors=32, tiers=[bb, fs])])
+    interf = [("bb", ConstantTraffic(capacity_mb=700.0, until=5.0))]
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=False),
+                   interference=interf) as rt:
+        @io
+        @task(returns=1)
+        def wshard(prev, i):
+            pass
+        prev = None
+        for i in range(6):
+            prev = wshard(prev, i, io_mb=128.0)
+        rt.barrier(final=True)
+        lc = rt.stats()["lifecycle"]
+    assert lc["n_evictions"] > 0
+    assert bb.peak_occupancy_mb <= bb.capacity_mb + 1e-6
+    assert bb.background_mb == 0.0  # burst fully returned
+
+
+# --------------------------------------------------------- drift adaptation
+def test_drift_config_validation():
+    with pytest.raises(ValueError):
+        DriftConfig(window=0)
+    with pytest.raises(ValueError):
+        DriftConfig(min_observations=20, window=10)
+    with pytest.raises(ValueError):
+        DriftConfig(threshold=1.0)
+    with pytest.raises(ValueError):
+        DriftConfig(prior_weight=1.0)
+    with pytest.raises(ValueError):
+        DriftConfig(recal_scope="some")
+    with pytest.raises(ValueError):
+        DriftConfig(probe_every=1)
+
+
+def _learned_tuner(drift=None):
+    tuner = AutoTuner("sig", parse_storage_bw("auto(8,16,2)"),
+                      device_bw=160.0, io_executors=8, drift=drift)
+    while tuner.learning():
+        assert tuner.admit()
+        tuner.epoch.closed_admission = True
+        tuner.on_task_complete(1.0)
+    return tuner
+
+
+def test_observe_reenters_calibration_and_blends_prior():
+    drift = DriftConfig(window=6, min_observations=3, threshold=1.5,
+                        prior_weight=0.5, recal_scope="all")
+    tuner = _learned_tuner(drift)
+    assert tuner.registry[8.0] == pytest.approx(1.0)
+    for _ in range(3):
+        tuner.observe(8.0, 4.0)  # 4x slower than learned
+    assert tuner.learning(), "drift must re-enter calibration"
+    assert tuner.n_recalibrations == 1
+    # recal_scope="all" walks every registered constraint and blends each
+    # with the decayed prior: re-measured 3.0 blended 50/50 with stale 1.0
+    while tuner.learning():
+        assert tuner.admit()
+        tuner.epoch.closed_admission = True
+        tuner.on_task_complete(3.0)
+    assert tuner.phase == Phase.DONE
+    assert tuner.registry[8.0] == pytest.approx(0.5 * 3.0 + 0.5 * 1.0)
+    assert tuner.registry[16.0] == pytest.approx(0.5 * 3.0 + 0.5 * 1.0)
+
+
+def test_active_recal_scope_remeasures_only_drifted_constraint():
+    drift = DriftConfig(window=6, min_observations=3, threshold=1.5,
+                        prior_weight=0.5, recal_scope="active")
+    tuner = _learned_tuner(drift)
+    for _ in range(3):
+        tuner.observe(8.0, 4.0)
+    assert tuner.learning() and tuner.current_constraint() == 8.0
+    assert tuner.admit()
+    tuner.epoch.closed_admission = True
+    tuner.on_task_complete(3.0)  # one epoch and done
+    assert tuner.phase == Phase.DONE
+    assert tuner.registry[8.0] == pytest.approx(2.0)   # blended
+    assert tuner.registry[16.0] == pytest.approx(1.0)  # untouched
+
+
+def test_observe_ignores_in_band_ratios():
+    tuner = _learned_tuner(DriftConfig(window=6, min_observations=3,
+                                       threshold=1.6))
+    for _ in range(6):
+        tuner.observe(8.0, 1.2)  # within band
+    assert not tuner.learning() and tuner.n_recalibrations == 0
+
+
+def test_observe_detects_speedup_too():
+    tuner = _learned_tuner(DriftConfig(window=6, min_observations=3,
+                                       threshold=1.5))
+    for _ in range(3):
+        tuner.observe(8.0, 0.2)  # 5x faster: congestion went away
+    assert tuner.learning() and tuner.n_recalibrations == 1
+
+
+def test_observe_noop_without_drift_config():
+    tuner = _learned_tuner(None)
+    for _ in range(10):
+        tuner.observe(8.0, 100.0)
+    assert not tuner.learning() and tuner.n_recalibrations == 0
+
+
+def test_drift_recalibration_end_to_end():
+    """A co-tenant arriving mid-run makes the isolated fit stale; the tuner
+    re-enters calibration on the interfered device and the registry moves."""
+    _fresh_tids()
+    cluster = Cluster.make(n_workers=2, cpus=4, io_executors=16,
+                           device_bw=200.0, per_stream_cap=20.0,
+                           shared_storage=True)
+    interf = [("fs", ConstantTraffic(streams=40, start=8.0))]
+    with IORuntime(cluster, backend=SimBackend(), interference=interf,
+                   drift=DriftConfig(window=8, min_observations=4,
+                                     threshold=1.5)) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def ck(i):
+            pass
+        for i in range(200):
+            ck(i, io_mb=30.0)
+        rt.barrier(final=True)
+        tuner = rt.scheduler.tuners["ck"]
+        assert tuner.n_recalibrations > 0
+        assert tuner.phase == Phase.DONE
+        assert rt.stats()["tuners"]["ck"]["n_recalibrations"] > 0
+
+
+# --------------------------------------------------- measured tier objective
+def _shared_two_tier():
+    bb = StorageDevice(name="bb", bandwidth=800.0, per_stream_cap=80.0,
+                       tier="bb")
+    fs = StorageDevice(name="fs", bandwidth=300.0, per_stream_cap=30.0,
+                       tier="fs")
+    return Cluster(workers=[
+        WorkerNode(name=f"w{i}", cpus=4, io_executors=16, tiers=[bb, fs])
+        for i in range(2)])
+
+
+def _run_auto(tier_objective, drift, interf, n=200):
+    _fresh_tids()
+    cluster = _shared_two_tier()
+    with IORuntime(cluster, backend=SimBackend(), interference=interf,
+                   drift=drift, tier_objective=tier_objective) as rt:
+        @constraint(storageBW="auto")
+        @io
+        @task()
+        def ck(i):
+            pass
+        for i in range(n):
+            ck(i, io_mb=40.0)
+        rt.barrier(final=True)
+        by_tier = {d.tier: d.bytes_written for d in cluster.devices}
+        return rt.stats()["makespan"], by_tier, rt.scheduler.tuners
+
+
+def test_tier_objective_learns_every_tier():
+    makespan, by_tier, tuners = _run_auto(True, None, None)
+    assert set(tuners) == {"ck@bb", "ck@fs"}
+    for t in tuners.values():
+        assert t.phase == Phase.DONE
+    # uncontended: the nominally faster bb tier carries the bulk
+    assert by_tier["bb"] > by_tier["fs"]
+
+
+def test_tier_objective_reroutes_under_interference():
+    """Under a heavy co-tenant on the nominally fastest tier, the measured
+    objective + drift adaptation route the bulk of the bytes to the
+    effectively faster tier and beat the nameplate walk."""
+    mk = lambda: [("bb", ConstantTraffic(streams=120, bw=600.0, start=3.0))]
+    m_base, bt_base, _ = _run_auto(False, None, mk())
+    m_adapt, bt_adapt, tuners = _run_auto(
+        True, DriftConfig(window=8, min_observations=4, threshold=1.5),
+        mk())
+    assert bt_base["fs"] == 0.0, "nameplate walk never leaves tier 0"
+    assert bt_adapt["fs"] > bt_adapt["bb"], "measured walk must reroute"
+    assert m_adapt < m_base
+    assert tuners["ck@bb"].n_recalibrations > 0
+
+
+# ------------------------------------------------ ephemeral objects (discard)
+def _two_tier(ssd_cap_gb):
+    fs = StorageDevice(name="fs", bandwidth=300.0, per_stream_cap=50.0,
+                       tier="fs")
+    ssd = StorageDevice(name="ssd", bandwidth=2000.0, per_stream_cap=400.0,
+                        tier="ssd", capacity_gb=ssd_cap_gb)
+    return Cluster(workers=[WorkerNode(name="w0", cpus=8, io_executors=32,
+                                       tiers=[ssd, fs])])
+
+
+def test_discard_requires_lifecycle():
+    _fresh_tids()
+    with IORuntime(Cluster.make(n_workers=1), backend=SimBackend()) as rt:
+        @io
+        @task(returns=1)
+        def w(i):
+            pass
+        f = w(0, io_mb=1.0)
+        with pytest.raises(RuntimeError, match="lifecycle"):
+            rt.discard(f)
+
+
+def test_discarded_objects_evict_without_drain():
+    _fresh_tids()
+    cluster = _two_tier(0.25)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=False)) as rt:
+        @io
+        @task(returns=1)
+        def wtmp(prev, i):
+            pass
+        prev = None
+        for i in range(5):
+            prev = wtmp(prev, i, io_mb=100.0)
+            rt.discard(prev)
+        rt.barrier(final=True)
+        lc = rt.stats()["lifecycle"]
+        drains = [t for t in rt.scheduler.completed
+                  if t.defn.name == "tier_drain"]
+        assert lc["n_discards"] > 0
+        assert not drains, "ephemeral eviction must skip the durable drain"
+        assert all(e["mode"] == "discard" for e in rt.catalog.events)
+
+
+def test_non_discarded_objects_still_drain():
+    _fresh_tids()
+    cluster = _two_tier(0.25)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=False)) as rt:
+        @io
+        @task(returns=1)
+        def wtmp(prev, i):
+            pass
+        prev = None
+        for i in range(5):
+            prev = wtmp(prev, i, io_mb=100.0)
+        rt.barrier(final=True)
+        assert any(t.defn.name == "tier_drain"
+                   for t in rt.graph.tasks.values()), \
+            "durable objects keep the drain-then-delete path"
+
+
+def test_discard_before_produced_defers_like_pin():
+    _fresh_tids()
+    cluster = _two_tier(8.0)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=False)) as rt:
+        @io
+        @task(returns=1)
+        def w(i):
+            pass
+        f = w(0, io_mb=10.0)
+        rt.discard(f)  # producer may not have registered yet
+        rt.barrier(final=True)
+        obj = rt.catalog.lookup_future(f)
+        assert obj is not None and obj.ephemeral
+
+
+# ---------------------------------------- prefetch under producer pipelining
+def _run_pipeline(pipeline, n=4):
+    _fresh_tids()
+    cluster = _two_tier(8.0)
+    cfg = LifecycleConfig(auto_prefetch=True, pipeline_prefetch=pipeline)
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg) as rt:
+        @constraint(tier="fs")
+        @io
+        @task(returns=1)
+        def produce(i):
+            pass
+
+        @task(returns=1)
+        def consume(x, i):
+            pass
+        for i in range(n):
+            p = produce(i, io_mb=200.0)  # lands on fs
+            consume(p, i, duration=2.0)  # submitted while p is pending
+        rt.barrier(final=True)
+        lc = rt.stats()["lifecycle"]
+        pen = sum(t.read_penalty for t in rt.scheduler.completed
+                  if t.defn.name == "consume")
+        return lc, pen, rt
+
+
+def test_pipelined_consumer_gets_conditional_staging():
+    lc_off, pen_off, _ = _run_pipeline(False)
+    lc_on, pen_on, _ = _run_pipeline(True)
+    assert lc_off["n_deferred_stages"] == 0
+    assert lc_on["n_deferred_stages"] > 0
+    assert lc_on["n_prefetches"] > 0, "useful movers become real stagings"
+    assert pen_on < pen_off, "staged consumers read from the fast tier"
+
+
+def test_useless_deferred_stage_is_neutralized():
+    """Producer lands on the target tier itself: the conditional mover must
+    become a zero-cost pass-through, not a copy."""
+    _fresh_tids()
+    cluster = _two_tier(8.0)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=True)) as rt:
+        @io
+        @task(returns=1)
+        def produce(i):
+            pass  # tier-agnostic: lands on the fast ssd
+
+        @task(returns=1)
+        def consume(x, i):
+            pass
+        p = produce(0, io_mb=50.0)
+        c = consume(p, 0, duration=0.5)
+        rt.barrier(final=True)
+        lc = rt.stats()["lifecycle"]
+        movers = [t for t in rt.graph.tasks.values()
+                  if t.defn.name == "tier_prefetch"]
+        assert lc["n_deferred_stages"] == 1
+        assert lc["n_prefetches"] == 0, "no staging needed"
+        assert len(movers) == 1 and movers[0].sim.io_bytes == 0.0
+
+
+def test_pipelined_stage_shared_by_sibling_readers():
+    _fresh_tids()
+    cluster = _two_tier(8.0)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=True)) as rt:
+        @constraint(tier="fs")
+        @io
+        @task(returns=1)
+        def produce(i):
+            pass
+
+        @task(returns=1)
+        def consume(x, i):
+            pass
+        p = produce(0, io_mb=100.0)
+        for i in range(3):
+            consume(p, i, duration=0.5)
+        rt.barrier(final=True)
+        lc = rt.stats()["lifecycle"]
+        assert lc["n_deferred_stages"] == 1, "siblings ride one mover"
+        assert lc["n_prefetches"] == 1
+
+
+def test_pipelined_stage_cancelled_with_failed_producer():
+    _fresh_tids()
+    cluster = _two_tier(8.0)
+    with IORuntime(cluster, backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=True)) as rt:
+        @constraint(tier="fs")
+        @io
+        @task(returns=1)
+        def produce(i):
+            pass
+
+        @task(returns=1)
+        def consume(x, i):
+            pass
+        p = produce(0, io_mb=100.0, sim_fail=True)
+        c = consume(p, 0, duration=0.5)
+        rt.barrier(final=True)
+        from repro.core import TaskState
+        states = {t.defn.name: t.state for t in rt.graph.tasks.values()}
+        assert states["produce"] == TaskState.FAILED
+        assert states["tier_prefetch"] == TaskState.FAILED  # cancelled
+        assert states["consume"] == TaskState.FAILED
+        assert not rt.catalog._deferred_stage, "failed decisions cleaned up"

@@ -74,12 +74,13 @@ def normalize(recipe):
     return out
 
 
-def run_recipe(recipe, make=make_cluster):
+def run_recipe(recipe, make=make_cluster, rt_kwargs=None):
     """Build and run the DAG a recipe describes; returns (runtime, cluster,
-    expected-fail map by recipe index)."""
+    expected-fail map by recipe index). ``rt_kwargs`` forwards extra
+    IORuntime arguments (e.g. an interference engine)."""
     _fresh_tids()
     cluster = make()
-    rt = IORuntime(cluster, backend=SimBackend())
+    rt = IORuntime(cluster, backend=SimBackend(), **(rt_kwargs or {}))
     expected_failed = {}
     with rt:
         @task(returns=1)
@@ -336,6 +337,126 @@ def test_makespan_monotone_in_tier_bandwidth(sizes, c, fs_bw, factor):
     same-class workload (the regime where this is a theorem; see module
     docstring for why dependent DAGs are excluded)."""
     _monotone_makespan(sizes, c, fs_bw, factor)
+
+
+# ----------------------------------------------- interference invariants
+from repro.core import BurstyTraffic, ConstantTraffic  # noqa: E402
+
+
+def _bursty_interference(seed=97):
+    """A heavy bursty co-tenant on both shared tiers (bandwidth + capacity
+    pressure), deterministic for a given seed."""
+    return [
+        ("bb", BurstyTraffic(seed=seed, on_mean=1.5, off_mean=1.0,
+                             streams=24, bw=200.0, capacity_mb=48.0)),
+        ("fs", BurstyTraffic(seed=seed + 1, on_mean=2.0, off_mean=0.5,
+                             streams=16, bw=60.0)),
+    ]
+
+
+def run_recipe_interfered(recipe, make=make_cluster, seed=97):
+    """run_recipe with a bursty co-tenant injected on the shared tiers."""
+    return run_recipe(recipe, make=make, rt_kwargs={
+        "interference": _bursty_interference(seed)})
+
+
+def assert_interference_invariants(rt, cluster):
+    """Universal invariants under co-tenant traffic: everything drains, our
+    accounting returns to the budget, and the background claims never
+    pushed a device over its bandwidth or capacity (the clamp worked)."""
+    tasks = sorted(rt.graph.tasks.values(), key=lambda t: t.tid)
+    assert rt.graph.unfinished == 0
+    for t in tasks:
+        assert t.state in (TaskState.DONE, TaskState.FAILED), t
+    for d in cluster.devices:
+        # our grants all returned; what is still out is exactly what the
+        # co-tenant holds right now (bursts may outlive the run)
+        assert d.active_io == 0, d.name
+        assert abs(d.available_bw + d.background_bw - d.bandwidth) < 1e-6, \
+            (d.name, d.available_bw, d.background_bw)
+        assert d.available_bw >= -1e-9 and d.background_bw >= -1e-9
+        assert d.background_streams >= 0
+        if d.capacity_mb is not None:
+            assert d.peak_occupancy_mb <= d.capacity_mb + 1e-6, \
+                f"{d.name}: background pushed occupancy over capacity"
+            assert d.background_mb >= -1e-9
+    # our own bandwidth grants alone never exceeded the budget either
+    by_dev = {}
+    for t in tasks:
+        if t.device is not None and t.granted_bw > 0:
+            by_dev.setdefault(id(t.device), (t.device, []))[1].append(t)
+    for dev, members in by_dev.values():
+        events = []
+        for t in members:
+            events.append((t.start_time, 1, t.granted_bw))
+            events.append((t.end_time, 0, -t.granted_bw))
+        events.sort()
+        level = 0.0
+        for _, _, delta in events:
+            level += delta
+            assert level <= dev.bandwidth + 1e-6, dev.name
+
+
+@pytest.mark.parametrize("recipe_idx", range(len(DET_RECIPES)))
+def test_interference_invariants_deterministic(recipe_idx):
+    recipe = normalize(DET_RECIPES[recipe_idx])
+    rt, cluster, _ = run_recipe_interfered(recipe)
+    assert_interference_invariants(rt, cluster)
+
+
+@pytest.mark.parametrize("recipe_idx", range(len(DET_RECIPES)))
+def test_interference_capacity_invariants_deterministic(recipe_idx):
+    """Bandwidth + capacity co-tenants on a finite-capacity hierarchy: the
+    full capacity invariant suite still holds (background claims excluded
+    from used_mb, which tracks only resident objects)."""
+    recipe = normalize(DET_RECIPES[recipe_idx])
+    rt, cluster, _ = run_recipe_interfered(recipe,
+                                           make=make_capacity_cluster)
+    assert_interference_invariants(rt, cluster)
+    cat = rt.catalog
+    for d in cluster.devices:
+        if d.capacity_mb is None:
+            continue
+        resident = cat._resident.get(id(d), set())
+        assert abs(d.used_mb - sum(o.size_mb for o in resident)) < 1e-6
+
+
+def test_interference_same_seed_bit_identical_fallback():
+    recipe = normalize(DET_RECIPES[2])
+    log1 = run_recipe_interfered(recipe)[0].scheduler.launch_log
+    log2 = run_recipe_interfered(recipe)[0].scheduler.launch_log
+    assert log1 == log2 and log1
+
+
+def test_zero_interference_config_is_golden_fallback():
+    """An engine with every traffic model disabled (no bindings) leaves the
+    launch log bit-identical to a run with no engine at all."""
+    recipe = normalize(DET_RECIPES[0])
+    plain = run_recipe(recipe)[0].scheduler.launch_log
+    empty = run_recipe(recipe, rt_kwargs={"interference": []})[0] \
+        .scheduler.launch_log
+    assert empty == plain
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(NODE, min_size=1, max_size=24),
+       st.integers(0, 1000))
+def test_interference_invariants_random_dags(recipe, seed):
+    """Universal interference invariants over random tiered DAGs with
+    random co-tenant seeds and injected faults."""
+    recipe = normalize(recipe)
+    rt, cluster, _ = run_recipe_interfered(recipe, seed=seed)
+    assert_interference_invariants(rt, cluster)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(NODE, min_size=2, max_size=16), st.integers(0, 1000))
+def test_interference_same_seed_same_trace_deterministic(recipe, seed):
+    """Same DAG + same co-tenant seed => bit-identical launch logs."""
+    recipe = normalize(recipe)
+    log1 = run_recipe_interfered(recipe, seed=seed)[0].scheduler.launch_log
+    log2 = run_recipe_interfered(recipe, seed=seed)[0].scheduler.launch_log
+    assert log1 == log2
 
 
 def test_hypothesis_mode_reported():
