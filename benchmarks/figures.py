@@ -4,7 +4,7 @@ claims where applicable — the claims ARE the reproduction target.
 """
 from __future__ import annotations
 
-from .apps import (HMMER_DUR_GAIN, HMMER_DUR_ORDER, run_hmmer, run_kmeans,
+from .apps import (HMMER_DUR_ORDER, run_hmmer, run_kmeans,
                    run_variants)
 
 STATIC_SWEEP = [2, 4, 8, 16, 32, 64, 128, 256]

@@ -11,7 +11,7 @@ from pathlib import Path
 
 from repro.configs import ARCHS, SHAPES, cell_supported, get_config
 
-from .analytic import cell_cost, roofline_terms
+from .analytic import roofline_terms
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 

@@ -45,6 +45,8 @@ def run(mode):
             else:
                 checkpoint(b, i, io_mb=290.0)
         rt.barrier(final=True)
+        diags = rt.lint()           # static I/O-plan analysis (docs/lint.md)
+        assert not diags, [str(d) for d in diags]
         return rt.stats()
 
 
@@ -52,10 +54,13 @@ if __name__ == "__main__":
     base = run("baseline")
     for mode in ("baseline", "non-constrained", "auto"):
         st = run(mode)
-        line = (f"{mode:16} total={st['makespan']:8.1f}s "
-                f"rel={st['makespan'] / base['makespan']:.2f}")
+        # makespan is 0.0 under capture mode (python -m repro.lint): guard
+        # the result post-processing so the plan records end to end
+        rel = st["makespan"] / base["makespan"] if base["makespan"] else 0.0
+        line = f"{mode:16} total={st['makespan']:8.1f}s rel={rel:.2f}"
         if mode == "auto":
-            t = st["tuners"]["checkpoint"]
-            line += (f"  learning epochs={[c for c, _ in t['history']]} "
-                     f"-> constraint {t['modal_choice']}")
+            t = st["tuners"].get("checkpoint")
+            if t:
+                line += (f"  learning epochs={[c for c, _ in t['history']]} "
+                         f"-> constraint {t['modal_choice']}")
         print(line)

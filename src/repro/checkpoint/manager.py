@@ -28,7 +28,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from ..core import IORuntime, constraint, current_runtime, io, task
+from ..core import constraint, current_runtime, io, task
 from ..core.runtime import copy_fsync
 from .serializer import (flatten_with_paths, plan_shards, read_shard,
                          unflatten_like, write_shard)

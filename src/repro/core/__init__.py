@@ -22,7 +22,22 @@ from .storage_model import (aggregate_throughput, cross_tier_time,
                             per_task_rate, read_floor_time)
 from .task import IN, INOUT, OUT, DataHandle, Direction, Future, TaskState
 
+# analysis itself imports the core submodules above, so its names are
+# re-exported lazily (PEP 562) — an eager import here would be circular
+# whenever repro.analysis is the import entry point (the lint CLI).
+_ANALYSIS_EXPORTS = ("CaptureBackend", "Diagnostic", "IOSanitizer",
+                     "SanitizerError")
+
+
+def __getattr__(name):
+    if name in _ANALYSIS_EXPORTS:
+        from .. import analysis
+        return getattr(analysis, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "CaptureBackend", "Diagnostic", "IOSanitizer", "SanitizerError",
     "task", "io", "constraint", "wait_on", "IORuntime", "current_runtime",
     "SimBackend", "RealBackend", "Cluster", "WorkerNode", "StorageDevice",
     "AutoSpec", "StaticSpec", "parse_storage_bw", "SchedulerError",

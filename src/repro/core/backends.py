@@ -22,9 +22,9 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Optional
 
-from .scheduler import Scheduler, SchedulerError
+from .scheduler import SchedulerError
 from .storage_model import per_task_rate
-from .task import DataHandle, Future, TaskInstance, TaskState, TaskType
+from .task import Future, TaskInstance, TaskState, TaskType
 
 _EPS = 1e-9
 
@@ -78,13 +78,20 @@ class SimBackend(Backend):
     #: exactly (covers float drift between push-time and pop-time arithmetic)
     _GUARD = 1e-9
 
-    def __init__(self):
+    def __init__(self, sanitize: bool = False):
         self.clock = 0.0
         self._compute: dict[int, tuple[TaskInstance, float]] = {}  # tid -> (task, end)
         self._io: dict[int, list] = {}  # tid -> [task, remaining_mb, min_end]
         # co-tenant traffic (interference.py); None keeps every code path —
         # and all arithmetic — identical to the interference-free simulator
         self.interference = None
+        # IOSan (repro.analysis.sanitizer): event-boundary invariant checks.
+        # All checks are pure reads, so sanitize=True leaves the launch log
+        # bit-identical; None costs one comparison per loop iteration.
+        self.sanitizer = None
+        if sanitize:
+            from ..analysis.sanitizer import IOSanitizer  # lazy: no cycle
+            self.sanitizer = IOSanitizer()
         self.io_busy_time = 0.0         # union over devices of I/O activity
         self.compute_busy_time = 0.0
         self.overlap_time = 0.0         # time with BOTH compute and I/O active
@@ -147,6 +154,11 @@ class SimBackend(Backend):
     def launch(self, task: TaskInstance, worker) -> None:
         task.start_time = self.clock
         task._sim_seq = next(self._launch_seq)
+        if self.sanitizer is not None:
+            self.sanitizer.record(
+                "launch", t=self.clock, tid=task.tid,
+                sig=task.defn.signature, worker=worker.name,
+                device=task.device.name if task.device is not None else None)
         # read_penalty: the data-lifecycle catalog's simulated cost of
         # pulling tracked inputs from their fastest resident tier (0.0
         # unless the lifecycle subsystem is active — grant-time snapshot)
@@ -292,11 +304,14 @@ class SimBackend(Backend):
         rt = self.runtime
         eng = self.interference
         bg_retries = 0
+        san = self.sanitizer
         while True:
             if rt.scheduler.schedule_pass():
                 bg_retries = 0
             # no refresh needed here: launches only allocate (rates drop),
             # which leaves existing estimates as valid lower bounds
+            if san is not None:
+                san.check(self)  # event boundary: after grants, before step
             if predicate():
                 return
             if not self._compute and not self._io:
@@ -335,6 +350,10 @@ class SimBackend(Backend):
             self._advance_to(t)
             for task in self._pop_due():
                 task.end_time = self.clock
+                if san is not None:
+                    san.record("complete", t=self.clock, tid=task.tid,
+                               sig=task.defn.signature,
+                               failed=bool(task.sim.fail))
                 if task.sim.fail:
                     # fault injection (sim_fail=True at call time): the task
                     # consumed its resources and time, then FAILs — the
@@ -355,6 +374,8 @@ class SimBackend(Backend):
                 rt.scheduler._dirty = True
                 rt._lifecycle_tick()
             self._refresh_stale_devices()  # releases raised device rates
+            if san is not None:
+                san.check(self)  # event boundary: completions + bursts done
 
 
 # --------------------------------------------------------------------------
@@ -385,6 +406,21 @@ class RealBackend(Backend):
 
     def bind(self, runtime) -> None:
         super().bind(runtime)
+        # validate tier_dirs keys against the cluster's actual tier labels
+        # up front: an unknown key used to be silently ignored and surfaced
+        # much later as a confusing per-task "no tier_dirs directory" error.
+        # Only enforced when the cluster models a hierarchy — on a single-
+        # tier cluster the labels are plain directory names for tier-
+        # agnostic path= movement, not modelled tiers.
+        tiers = runtime.cluster.tier_names()
+        unknown = sorted(k for k in self.tier_dirs
+                         if not runtime.cluster.has_tier(k))
+        if unknown and len(tiers) > 1:
+            raise ValueError(
+                f"RealBackend tier_dirs key(s) {unknown} name no storage "
+                f"tier in the cluster (tiers: "
+                f"{runtime.cluster.tier_names()}) — a path= drain/prefetch "
+                f"targeting them could never resolve its endpoint")
         self._cv = threading.Condition(runtime.lock)
 
     def now(self) -> float:

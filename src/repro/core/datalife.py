@@ -239,10 +239,15 @@ class DataCatalog:
     """
 
     def __init__(self, cluster: Cluster, config: Optional[LifecycleConfig],
-                 now: Callable[[], float]):
+                 now: Callable[[], float], strict: bool = True):
         self.cluster = cluster
         self.config = config or LifecycleConfig()
         self.now = now
+        # strict=False (capture mode, repro.analysis): configuration errors
+        # are recorded here instead of raising, so the static analyzer can
+        # report them as diagnostics (IO204) over a plan that a live
+        # runtime would refuse to construct
+        self.config_errors: list[str] = []
         self._tier_order = cluster.tier_names()
         self._rank = {t: i for i, t in enumerate(self._tier_order)}
         # apply TierCapacity budgets before auto-detection
@@ -268,13 +273,16 @@ class DataCatalog:
                       if d.tier == self.durable_tier
                       and d.capacity_gb is not None]
             if finite:
-                raise ValueError(
+                msg = (
                     f"durable tier {self.durable_tier!r} must be unlimited "
                     f"when auto_evict is on (eviction drains terminate "
                     f"there and are never themselves evicted), but "
                     f"{finite} carry capacity_gb — drop the budget, pick "
                     f"another durable_tier, or set "
                     f"LifecycleConfig(auto_evict=False)")
+                if strict:
+                    raise ValueError(msg)
+                self.config_errors.append(msg)
         # capacities are fixed once the runtime is constructed: precompute
         # the finite devices so the per-submission/per-completion lifecycle
         # tick doesn't rescan workers x tiers (0-3 entries in practice)
@@ -349,10 +357,14 @@ class DataCatalog:
 
     # ----------------------------------------------------------- ingestion
     def add_external(self, name: str, size_mb: float, tier: str,
-                     pinned: bool = False) -> DataObject:
+                     pinned: bool = False, charge: bool = True
+                     ) -> DataObject:
         """Register a dataset that already exists on ``tier`` at time zero
         (the CkIO input case: files on the parallel FS before the run).
-        Commits capacity on the tier's representative device."""
+        Commits capacity on the tier's representative device.
+        ``charge=False`` (capture mode) registers residency without
+        touching device accounting, keeping plan capture side-effect-free
+        on a shared cluster object."""
         if size_mb <= 0:
             raise ValueError(f"external object {name!r}: size_mb must be "
                              f"positive, got {size_mb}")
@@ -362,12 +374,13 @@ class DataCatalog:
                 f"external object {name!r}: tier {tier!r} not present "
                 f"(available: {self._tier_order})")
         obj = DataObject(name, size_mb, pinned=pinned, created=self.now())
-        if not dev.can_reserve_capacity(size_mb):
-            raise ValueError(
-                f"external object {name!r} ({size_mb} MB) does not fit on "
-                f"{dev.name} ({dev.free_capacity_mb():.0f} MB free)")
-        dev.reserve_capacity(size_mb)
-        dev.commit_capacity(size_mb)
+        if charge:
+            if not dev.can_reserve_capacity(size_mb):
+                raise ValueError(
+                    f"external object {name!r} ({size_mb} MB) does not fit "
+                    f"on {dev.name} ({dev.free_capacity_mb():.0f} MB free)")
+            dev.reserve_capacity(size_mb)
+            dev.commit_capacity(size_mb)
         self._add_residency(obj, dev)
         self.objects[obj.oid] = obj
         return obj

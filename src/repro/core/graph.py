@@ -8,7 +8,6 @@ on every reader of the current version (serialising in-place updates).
 from __future__ import annotations
 
 import inspect
-from typing import Iterable
 
 from .task import (DataHandle, Direction, Future, TaskInstance, TaskState)
 
@@ -38,6 +37,63 @@ def iter_futures(obj, _depth=0):
                 yield from iter_futures(v, _depth + 1)
 
 
+def bind_args(task: "TaskInstance") -> list:
+    """(param_name, argument) pairs in binding order (positional then
+    keyword) — the order dependency detection and DataHandle version
+    bumps observe."""
+    names = _param_names(task.defn)
+    return list(zip(names, task.args)) + list(task.kwargs.items())
+
+
+def compute_deps(task: "TaskInstance") -> dict:
+    """Predecessor detection WITHOUT mutating any DataHandle bookkeeping:
+    maps each predecessor TaskInstance to True for a *data* edge
+    (read-after-write / write-after-write) or False for an *anti* edge
+    (write-after-read ordering only). Data wins when both apply.
+
+    :meth:`TaskGraph.add` applies the handle side effects afterwards via
+    :func:`apply_handle_effects`; the static-analysis capture recorder
+    (repro.analysis.capture) calls this directly to record the full
+    happens-before relation — including edges to already-DONE producers,
+    which ``add`` elides as satisfied.
+    """
+    deps: dict = {}  # predecessor TaskInstance -> is_data
+    for pname, arg in bind_args(task):
+        if isinstance(arg, DataHandle):
+            direction = task.defn.param_dirs.get(pname, Direction.IN)
+            if direction == Direction.IN:
+                if arg.last_writer is not None:
+                    deps[arg.last_writer] = True
+            else:  # INOUT / OUT: write-after-write + write-after-read
+                if direction == Direction.INOUT and \
+                        arg.last_writer is not None:
+                    deps[arg.last_writer] = True
+                for r in arg.readers_since_write:
+                    if r is not task:
+                        deps.setdefault(r, False)  # anti edge
+        else:
+            for fut in iter_futures(arg):
+                deps[fut.task] = True
+    deps.pop(task, None)  # a handle passed twice can't self-depend
+    return deps
+
+
+def apply_handle_effects(task: "TaskInstance") -> None:
+    """Second pass of dependency detection: record this task against every
+    DataHandle argument (reader lists, version bumps, last-writer) in the
+    same binding order the one-pass implementation used."""
+    for pname, arg in bind_args(task):
+        if not isinstance(arg, DataHandle):
+            continue
+        direction = task.defn.param_dirs.get(pname, Direction.IN)
+        if direction == Direction.IN:
+            arg.readers_since_write.append(task)
+        else:
+            arg.version += 1
+            arg.last_writer = task
+            arg.readers_since_write = []
+
+
 class TaskGraph:
     def __init__(self):
         self.tasks: dict[int, TaskInstance] = {}
@@ -53,30 +109,8 @@ class TaskGraph:
         to be out of the way, so a FAILED/cancelled predecessor satisfies
         them instead of propagating the failure.
         """
-        names = _param_names(task.defn)
-        bound = list(zip(names, task.args)) + list(task.kwargs.items())
-
-        deps: dict[TaskInstance, bool] = {}  # dep -> is_data (data wins)
-        for pname, arg in bound:
-            if not isinstance(arg, DataHandle):
-                for fut in iter_futures(arg):
-                    deps[fut.task] = True
-            if isinstance(arg, DataHandle):
-                direction = task.defn.param_dirs.get(pname, Direction.IN)
-                if direction == Direction.IN:
-                    if arg.last_writer is not None:
-                        deps[arg.last_writer] = True
-                    arg.readers_since_write.append(task)
-                else:  # INOUT / OUT: write-after-write + write-after-read
-                    if direction == Direction.INOUT and \
-                            arg.last_writer is not None:
-                        deps[arg.last_writer] = True
-                    for r in arg.readers_since_write:
-                        if r is not task:
-                            deps.setdefault(r, False)  # anti edge
-                    arg.version += 1
-                    arg.last_writer = task
-                    arg.readers_since_write = []
+        deps = compute_deps(task)  # dep -> is_data (data wins)
+        apply_handle_effects(task)
 
         task.deps = set()
         task.anti_deps = set()

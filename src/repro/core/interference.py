@@ -118,16 +118,21 @@ class BurstyTraffic(TrafficModel):
     generator is ``random.Random(seed)``, so the burst train is a pure
     function of the constructor arguments. ``until`` bounds the train (a
     burst straddling ``until`` is truncated to it).
+
+    ``seed=None`` is allowed but draws the train from OS entropy — runs
+    stop being reproducible, and the static analyzer flags every such
+    model bound to a device (diagnostic ``IO401``, ``seeded`` False).
     """
 
-    def __init__(self, seed: int, on_mean: float, off_mean: float,
+    def __init__(self, seed: Optional[int], on_mean: float, off_mean: float,
                  streams: int = 1, bw: float = 0.0,
                  capacity_mb: float = 0.0, until: float = _INF):
         if on_mean <= 0 or off_mean <= 0:
             raise ValueError(
                 f"on_mean/off_mean must be positive "
                 f"(got {on_mean}/{off_mean})")
-        self.seed = int(seed)
+        self.seed = None if seed is None else int(seed)
+        self.seeded = self.seed is not None
         self.on_mean = float(on_mean)
         self.off_mean = float(off_mean)
         self.streams = int(streams)
@@ -181,15 +186,27 @@ class TraceTraffic(TrafficModel):
             except json.JSONDecodeError as e:
                 raise ValueError(
                     f"trace line {i + 1}: invalid JSON ({e})") from e
+            if not isinstance(rec, dict):
+                raise ValueError(
+                    f"trace line {i + 1}: expected a JSON object, got "
+                    f"{type(rec).__name__} ({line[:60]!r})")
             if "t" not in rec or "dur" not in rec:
                 raise ValueError(
                     f"trace line {i + 1}: needs 't' and 'dur' keys, got "
                     f"{sorted(rec)}")
-            out.append(Burst(start=float(rec["t"]),
-                             duration=float(rec["dur"]),
-                             streams=int(rec.get("streams", 1)),
-                             bw=float(rec.get("bw", 0.0)),
-                             capacity_mb=float(rec.get("capacity_mb", 0.0))))
+            try:
+                out.append(Burst(
+                    start=float(rec["t"]),
+                    duration=float(rec["dur"]),
+                    streams=int(rec.get("streams", 1)),
+                    bw=float(rec.get("bw", 0.0)),
+                    capacity_mb=float(rec.get("capacity_mb", 0.0))))
+            except (TypeError, ValueError) as e:
+                # malformed values (negative duration, non-numeric fields)
+                # surface with the line number instead of a bare Burst/
+                # float error from deep inside model construction
+                raise ValueError(
+                    f"trace line {i + 1}: invalid record ({e})") from e
         return TraceTraffic(out)
 
 

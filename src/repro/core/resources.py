@@ -216,6 +216,46 @@ class StorageDevice:
         if self.used_mb < -1e-6:
             raise RuntimeError(f"capacity occupancy underflow on {self.name}")
 
+    def check_invariants(self) -> list:
+        """Read-only audit of the accounting state, returning human-readable
+        violation messages (empty when consistent). Driven by the inline
+        sanitizer (repro.analysis.sanitizer) at every simulation event
+        boundary; the runtime's own accounting methods raise eagerly on the
+        underflows they can see locally — this catches cross-counter drift
+        they can't."""
+        eps = 1e-6
+        out = []
+        if self.available_bw < -eps:
+            out.append(
+                f"{self.name}: bandwidth over-committed "
+                f"(available_bw={self.available_bw:.6f} MB/s)")
+        if self.available_bw > self.bandwidth + eps:
+            out.append(
+                f"{self.name}: bandwidth over-released "
+                f"(available_bw={self.available_bw:.6f} exceeds budget "
+                f"{self.bandwidth:g} MB/s)")
+        if self.active_io < 0:
+            out.append(f"{self.name}: active_io negative ({self.active_io})")
+        if self.background_streams < 0 or self.background_bw < -eps \
+                or self.background_mb < -eps:
+            out.append(
+                f"{self.name}: background traffic accounting negative "
+                f"(streams={self.background_streams}, "
+                f"bw={self.background_bw:.6f}, mb={self.background_mb:.6f})")
+        if self.used_mb < -eps or self.reserved_mb < -eps:
+            out.append(
+                f"{self.name}: capacity accounting negative "
+                f"(used_mb={self.used_mb:.6f}, "
+                f"reserved_mb={self.reserved_mb:.6f})")
+        cap = self.capacity_mb
+        if cap is not None and self.occupancy_mb > cap + eps:
+            out.append(
+                f"{self.name}: occupancy {self.occupancy_mb:.3f} MB exceeds "
+                f"capacity {cap:.0f} MB (used={self.used_mb:.3f}, "
+                f"reserved={self.reserved_mb:.3f}, "
+                f"background={self.background_mb:.3f})")
+        return out
+
     def reset(self):
         self.available_bw = self.bandwidth
         self.active_io = 0

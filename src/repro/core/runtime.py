@@ -46,6 +46,7 @@ from __future__ import annotations
 import os
 import shutil
 import threading
+from contextlib import contextmanager
 from typing import Optional
 
 from .autotune import DriftConfig
@@ -251,8 +252,27 @@ class IORuntime:
                  drift: Optional[DriftConfig] = None,
                  tier_objective: bool = False):
         self.cluster = cluster
+        # constructor config, replayed by rt.plan() to build the capture
+        # sibling with the same lifecycle/interference/tuning setup
+        self._plan_config = dict(scheduler_cls=scheduler_cls,
+                                 lifecycle=lifecycle,
+                                 interference=interference, drift=drift,
+                                 tier_objective=tier_objective)
         if isinstance(backend, str):
-            backend = SimBackend() if backend == "sim" else RealBackend()
+            if backend == "capture":
+                from ..analysis.capture import CaptureBackend  # lazy: cycle
+                backend = CaptureBackend()
+            elif backend == "sim":
+                backend = SimBackend()
+            else:
+                backend = RealBackend()
+        # forced capture (the repro.lint CLI): whatever backend the script
+        # asked for is replaced by a recording one — no task body executes
+        from ..analysis import capture as _capture
+        forced = _capture.FORCE and not getattr(backend, "is_capture", False)
+        if forced:
+            backend = _capture.CaptureBackend()
+        self.capture_mode = bool(getattr(backend, "is_capture", False))
         self.backend = backend
         self.lock = threading.RLock()
         self.graph = TaskGraph()
@@ -270,22 +290,36 @@ class IORuntime:
                                                 InterferenceEngine) \
                 else InterferenceEngine(list(interference), cluster)
             if engine.active:
-                if not isinstance(backend, SimBackend):
+                if self.capture_mode:
+                    # recorded for the analyzer (IO401 reads the bindings);
+                    # never attached — capture injects no traffic
+                    self.interference = engine
+                elif not isinstance(backend, SimBackend):
                     raise ValueError(
                         "interference injection models co-tenant traffic in "
                         "the simulator; it is not supported on "
                         f"{type(backend).__name__}")
-                backend.attach_interference(engine)
-                self.interference = engine
-        self.catalog = DataCatalog(cluster, lifecycle, now=self.backend.now)
+                else:
+                    backend.attach_interference(engine)
+                    self.interference = engine
+        # plan() replays the *resolved* engine (an iterable argument was
+        # consumed above; None when inactive, which has nothing to analyze)
+        self._plan_config["interference"] = self.interference
+        # capture mode constructs non-strict: lifecycle config errors are
+        # recorded (diagnostic IO204) instead of raising, so a plan a live
+        # runtime would refuse can still be analyzed
+        self.catalog = DataCatalog(cluster, lifecycle, now=self.backend.now,
+                                   strict=not self.capture_mode)
         self.catalog.graph = self.graph
-        if self.catalog.enabled:
+        if self.catalog.enabled and not self.capture_mode:
             set_catalog = getattr(self.scheduler, "set_catalog", None)
             if set_catalog is not None:
                 set_catalog(self.catalog)
         self._in_tick = False
         self.backend.bind(self)
         self._entered = False
+        if forced:
+            _capture.register(self)  # the CLI lints every hijacked runtime
 
     # ---------------------------------------------------------------- context
     def __enter__(self):
@@ -306,6 +340,24 @@ class IORuntime:
     def submit(self, defn: TaskDef, args, kwargs, sim: SimSpec,
                storage_bw=None, storage_tier=None):
         with self.lock:
+            if self.capture_mode:
+                # record-only path: no staging, no constraint validation
+                # (unsatisfiable classes become IO1xx diagnostics instead of
+                # raises), no scheduler, no lifecycle bookkeeping. The
+                # capture hook runs BEFORE graph.add so the full
+                # happens-before relation — including edges to already-DONE
+                # producers, which add elides — is kept for the analyzer.
+                inst = TaskInstance(defn, args, kwargs, sim=sim,
+                                    storage_bw=storage_bw,
+                                    storage_tier=storage_tier)
+                inst.submit_time = 0.0
+                self.backend.capture.on_submit(inst)
+                ready = self.graph.add(inst)
+                if ready and inst.state != TaskState.FAILED:
+                    self.backend.mark_ready(inst)
+                if defn.returns > 1:
+                    return tuple(inst.futures)
+                return inst.futures[0]
             args, kwargs = self._stage_inputs(defn, args, kwargs,
                                               storage_tier)
             inst = TaskInstance(defn, args, kwargs, sim=sim,
@@ -459,19 +511,31 @@ class IORuntime:
                 "a tier a finite capacity_gb or pass "
                 "LifecycleConfig(enabled=True)")
         with self.lock:
+            # capture: register without charging device capacity (the
+            # analyzer reasons about footprints symbolically; a recording
+            # run must leave shared device state untouched)
             obj = self.catalog.add_external(name, size_mb, tier,
-                                            pinned=pinned)
+                                            pinned=pinned,
+                                            charge=not self.capture_mode)
             fut = resolved_future(value=name, name=f"external:{name}")
             self.catalog.map_future(fut, obj)
+            if self.capture_mode:
+                self.backend.capture.on_external(name, size_mb, tier, pinned)
         return fut
 
     def pin(self, fut) -> None:
         """Exempt the future's data object from eviction."""
         with self.lock:
+            if self.capture_mode:
+                self.backend.capture.on_pin(fut)
+                return
             self.catalog.pin(fut)
 
     def unpin(self, fut) -> None:
         with self.lock:
+            if self.capture_mode:
+                self.backend.capture.on_unpin(fut)
+                return
             self.catalog.unpin(fut)
 
     def discard(self, fut) -> None:
@@ -486,6 +550,9 @@ class IORuntime:
                 "discard requires the data lifecycle subsystem: give a tier "
                 "a finite capacity_gb or pass LifecycleConfig(enabled=True)")
         with self.lock:
+            if self.capture_mode:
+                self.backend.capture.on_discard(fut)
+                return
             self.catalog.discard(fut)
 
     # ----------------------------------------------------- tier data movement
@@ -588,6 +655,42 @@ class IORuntime:
         self.backend.drain(lambda: all(f.resolved() for f in futures))
         vals = [f.value() for f in futures]
         return vals[0] if len(vals) == 1 else vals
+
+    # --------------------------------------------------------------- analysis
+    def lint(self) -> list:
+        """Run the static I/O-plan analyzer (see docs/lint.md) over this
+        runtime's recorded plan (capture mode) or live graph. Returns the
+        ``Diagnostic`` list sorted by (code, tid); empty means clean."""
+        from ..analysis.lint import lint_runtime  # lazy: import cycle
+        return lint_runtime(self)
+
+    @contextmanager
+    def plan(self):
+        """Capture-mode sibling: a second runtime over the same cluster and
+        configuration whose backend records the task DAG without executing
+        any task body (futures resolve to ``None``). While the block is
+        active it is the ambient runtime, so the same driving code that
+        feeds this runtime can be replayed against it::
+
+            with rt.plan() as p:
+                build_pipeline()          # decorators submit to p, not rt
+            diags = p.lint()
+
+        Device state and catalogs of the live runtime are untouched."""
+        cfg = self._plan_config
+        prt = IORuntime(self.cluster, backend="capture",
+                        scheduler_cls=cfg["scheduler_cls"],
+                        lifecycle=cfg["lifecycle"],
+                        interference=cfg["interference"],
+                        drift=cfg["drift"],
+                        tier_objective=cfg["tier_objective"])
+        prev = getattr(_current, "rt", None)
+        _current.rt = prt
+        try:
+            yield prt
+            prt.barrier(final=True)
+        finally:
+            _current.rt = prev
 
     # ------------------------------------------------------------------ stats
     def stats(self) -> dict:

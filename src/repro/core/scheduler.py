@@ -53,6 +53,28 @@ class SchedulerError(RuntimeError):
     pass
 
 
+def eligible_devices(cluster: Cluster,
+                     tier: Optional[str]) -> list[StorageDevice]:
+    """Distinct devices a task with tier hint ``tier`` may ever be granted
+    on (every tier of every worker when unhinted; shared devices appear
+    once). Shared between submission-time class validation below and the
+    static plan analyzer (repro.analysis.lint), so a lint diagnostic and a
+    runtime ``SchedulerError`` can never disagree about placeability."""
+    seen: set[int] = set()
+    out: list[StorageDevice] = []
+    for w in cluster.workers:
+        if tier is None:
+            devs = w.tiers
+        else:
+            d = w.tier_device(tier)
+            devs = [d] if d is not None else []
+        for d in devs:
+            if id(d) not in seen:
+                seen.add(id(d))
+                out.append(d)
+    return out
+
+
 class Scheduler:
     def __init__(self, cluster: Cluster,
                  launch: Callable[[TaskInstance, WorkerNode], None]):
@@ -264,9 +286,7 @@ class Scheduler:
                 f"(available: {self.cluster.tier_names()})")
         if key[0] == "S" and key[1] > 0:
             bw = key[1]
-            devs = [d for w in self.cluster.workers
-                    for d in ([self._tier_on(w, tier)] if tier is not None
-                              else w.tiers) if d is not None]
+            devs = eligible_devices(self.cluster, tier)
             if all(d.bandwidth < bw for d in devs):
                 raise SchedulerError(
                     f"storageBW={bw} exceeds every device's bandwidth"

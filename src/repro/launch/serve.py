@@ -25,10 +25,15 @@ from ..models import Model
 
 
 @io
-@task()
-def _dump_trace(path, record):
+@task(returns=1)
+def _dump_trace(path, record, prev=None):
+    # `prev` is the previous dump's future: chaining it serializes appends
+    # to the shared trace file (unordered writers on one path is exactly
+    # lint diagnostic IO301 — and a real interleaving hazard on the
+    # RealBackend's I/O thread pool)
     with open(path, "a") as f:
         f.write(json.dumps(record) + "\n")
+    return path
 
 
 def serve(cfg, *, n_requests=8, prompt_len=32, max_new=16, batch=4,
@@ -47,6 +52,7 @@ def serve(cfg, *, n_requests=8, prompt_len=32, max_new=16, batch=4,
                                           storage=dev)])
     done, t0 = [], time.monotonic()
     new_tokens = 0
+    trace_tok = None
     with IORuntime(cluster, backend=RealBackend()):
         queue = list(enumerate(prompts))
         while queue:
@@ -66,7 +72,7 @@ def serve(cfg, *, n_requests=8, prompt_len=32, max_new=16, batch=4,
                        "t": time.monotonic() - t0}
                 done.append(rec)
                 if trace_path:
-                    _dump_trace(trace_path, rec)
+                    trace_tok = _dump_trace(trace_path, rec, trace_tok)
     wall = time.monotonic() - t0
     return {"requests": len(done), "new_tokens": new_tokens,
             "tokens_per_s": new_tokens / wall, "wall_s": wall,

@@ -6,7 +6,7 @@ import itertools
 import pytest
 
 from repro.core import (Cluster, IORuntime, LifecycleConfig, LRUEviction,
-                        SimBackend, StorageDevice, TaskState, TierCapacity,
+                        SimBackend, StorageDevice, TierCapacity,
                         WorkerNode, constraint, io, task)
 from repro.core.task import TaskInstance
 

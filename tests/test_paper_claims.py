@@ -3,7 +3,7 @@ calibrated storage model (small-but-faithful workloads for speed)."""
 import pytest
 
 from benchmarks.apps import run_hmmer, run_kmeans
-from repro.core import StorageDevice, aggregate_throughput, max_concurrent_tasks
+from repro.core import max_concurrent_tasks
 
 
 def test_unbounded_learning_walk():

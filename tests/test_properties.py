@@ -24,6 +24,7 @@ Every property has a deterministic fallback case so the module tests the
 same invariants when hypothesis isn't installed (hypothesis_support shim).
 """
 import itertools
+import os
 
 import pytest
 from hypothesis_support import HAVE_HYPOTHESIS, given, settings, st
@@ -40,6 +41,14 @@ BW_CHOICES = (None, 8.0, 24.0, 64.0, "auto")
 def _fresh_tids():
     """Launch logs embed tids; identical recipes must mint identical tids."""
     TaskInstance._ids = itertools.count()
+
+
+def _sim_backend():
+    """REPRO_SANITIZE=1 (nightly CI) arms IOSan: every event boundary
+    asserts occupancy/bandwidth/residency invariants in-line. Checks are
+    pure reads, so the launch logs the determinism properties compare stay
+    bit-identical with the flag on or off."""
+    return SimBackend(sanitize=bool(os.environ.get("REPRO_SANITIZE")))
 
 
 def make_cluster():
@@ -80,7 +89,7 @@ def run_recipe(recipe, make=make_cluster, rt_kwargs=None):
     IORuntime arguments (e.g. an interference engine)."""
     _fresh_tids()
     cluster = make()
-    rt = IORuntime(cluster, backend=SimBackend(), **(rt_kwargs or {}))
+    rt = IORuntime(cluster, backend=_sim_backend(), **(rt_kwargs or {}))
     expected_failed = {}
     with rt:
         @task(returns=1)
@@ -199,7 +208,7 @@ def _monotone_makespan(sizes, bw_constraint, fs_bw, factor):
         _fresh_tids()
         cluster = Cluster.make_tiered(n_workers=2, cpus=4, io_executors=6,
                                       fs_bw=b, fs_stream_cap=8.0)
-        with IORuntime(cluster, backend=SimBackend()) as rt:
+        with IORuntime(cluster, backend=_sim_backend()) as rt:
             @io
             @task()
             def wr(i):

@@ -6,7 +6,7 @@ import time
 import pytest
 
 from repro.core import (Cluster, IORuntime, RealBackend, StorageDevice,
-                        WorkerNode, constraint, io, task, wait_on)
+                        WorkerNode, constraint, io, task)
 
 
 def small_cluster():
