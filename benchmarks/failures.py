@@ -1,0 +1,200 @@
+"""Tier failure-domain benchmark (ISSUE 7 tentpole evidence).
+
+One scenario, one JSON (``BENCH_failures.json``): a training-style step
+chain on a burst-buffer + shared-FS hierarchy **loses the burst buffer
+mid-drain**. Each step writes snapshot shards to the fast tier while the
+lifecycle subsystem drains cold shards to the durable FS in the shadow of
+compute; at ``t_fail`` a seeded :class:`FailureSchedule` takes every bb
+device offline, with shards still resident there and drains in flight.
+
+Two recovery strategies over the identical workload and failure time:
+
+* ``reroute`` — the failure-domain subsystem (failures.py): in-flight I/O
+  on the dead tier fails into the bounded-retry path and re-lands on the
+  FS, lost residencies are dropped, orphaned shards are re-produced via
+  lineage re-runs, and the run keeps going. Must finish with **zero lost
+  objects** (every non-ephemeral shard resident on a healthy device).
+* ``abort_restart`` — the classic baseline: the failure aborts the job,
+  which restarts from scratch on the surviving FS-only cluster. Its cost
+  is ``t_fail + makespan(full rerun on fs)``.
+
+Reroute must beat abort-and-restart on makespan. A third check pins the
+inert-path guarantee: an **empty** ``FailureSchedule`` produces a launch
+log bit-identical to a run with no failure wiring at all.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.failures \
+        [--steps 10] [--out BENCH_failures.json]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import time
+
+from repro.core import (Cluster, FailureSchedule, IORuntime, LifecycleConfig,
+                        SimBackend, StorageDevice, WorkerNode, constraint,
+                        io, task)
+from repro.core.task import TaskInstance
+
+BB_BW, BB_CAP = 1200.0, 300.0
+FS_BW, FS_CAP = 300.0, 50.0
+
+
+def _reset_ids() -> None:
+    TaskInstance._ids = itertools.count()
+
+
+def make_cluster(with_bb: bool = True, bb_capacity_gb: float = 1.0
+                 ) -> Cluster:
+    """Shared burst buffer (finite, fast) over a shared parallel FS
+    (unlimited, durable); ``with_bb=False`` is the post-failure survivor
+    topology the abort-and-restart baseline reruns on."""
+    fs = StorageDevice(name="shared-fs", bandwidth=FS_BW,
+                       per_stream_cap=FS_CAP, tier="fs")
+    tiers = [fs]
+    if with_bb:
+        bb = StorageDevice(name="shared-bb", bandwidth=BB_BW,
+                           per_stream_cap=BB_CAP, tier="bb",
+                           capacity_gb=bb_capacity_gb)
+        tiers = [bb, fs]
+    workers = [WorkerNode(name="w0", cpus=8, io_executors=32, tiers=tiers)]
+    return Cluster(workers=workers)
+
+
+def run_variant(n_steps: int = 10, n_shards: int = 3,
+                shard_mb: float = 128.0, step_s: float = 1.5,
+                shard_bw: float = 150.0, with_bb: bool = True,
+                failures=None) -> dict:
+    """The step chain: compute, then a burst of snapshot shards onto the
+    fastest tier; the next step gates on the previous burst so shards stay
+    reader-protected until absorbed, after which eviction drains them to
+    the FS behind the following compute."""
+    _reset_ids()
+    cluster = make_cluster(with_bb=with_bb)
+    cfg = LifecycleConfig(auto_prefetch=False)
+    t0 = time.perf_counter()
+    with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg,
+                   failures=failures) as rt:
+        @task(returns=1)
+        def step(prev, gate, i):
+            pass
+
+        @constraint(storageBW=shard_bw, maxRetries=3)
+        @io
+        @task(returns=1)
+        def write_shard(x, i, j):
+            pass
+
+        prev, gate = None, None
+        for i in range(n_steps):
+            prev = step(prev, gate, i, duration=step_s)
+            gate = [write_shard(prev, i, j, io_mb=shard_mb)
+                    for j in range(n_shards)]
+        rt.barrier(final=True)
+        stats = rt.stats()
+        cat = rt.catalog
+        tracked = [o for o in cat.objects.values() if not o.ephemeral]
+        lost = len(cat.lost_objects) + sum(1 for o in tracked
+                                           if not o.residency)
+        on_dead = sum(1 for o in tracked for d in o.residency.values()
+                      if d.health == "offline")
+        launch_log = list(rt.scheduler.launch_log)
+        retried = sum(1 for t in rt.scheduler.completed if t.retries > 0)
+        shard_windows = sorted(
+            (round(t.start_time, 6), round(t.end_time, 6))
+            for t in rt.scheduler.completed
+            if t.defn.name == "write_shard" and t.device is not None
+            and t.device.tier == "bb")
+        transitions = list(rt.failures.log) if rt.failures is not None \
+            else []
+    out = {
+        "makespan": stats["makespan"],
+        "wall_seconds": time.perf_counter() - t0,
+        "n_tasks": stats["n_tasks"],
+        "n_objects": len(tracked),
+        "n_lost_objects": lost,
+        "n_residencies_on_dead_devices": on_dead,
+        "n_retried_tasks": retried,
+        "n_evictions": stats.get("lifecycle", {}).get("n_evictions", 0),
+        "health_transitions": transitions,
+        "shard_windows": shard_windows,
+    }
+    return out, launch_log
+
+
+def compare(n_steps: int = 10, **kw) -> dict:
+    # healthy reference: where the failure time lands relative to a clean
+    # run, and the launch log the empty-schedule parity check pins
+    healthy, log_plain = run_variant(n_steps=n_steps, **kw)
+    _, log_empty = run_variant(n_steps=n_steps,
+                               failures=FailureSchedule([]), **kw)
+    parity = log_plain == log_empty
+
+    # fail mid-burst: the midpoint of a shard write ~40% into the healthy
+    # run's bb write windows — the sim prefix up to t_fail is identical, so
+    # the same shard is guaranteed in flight on the dying tier
+    windows = healthy["shard_windows"]
+    lo, hi = windows[int(0.4 * len(windows))]
+    t_fail = round((lo + hi) / 2, 3)
+    schedule = FailureSchedule([(t_fail, "bb", "offline")])
+    reroute, _ = run_variant(n_steps=n_steps, failures=schedule, **kw)
+
+    # abort-and-restart: the job dies at t_fail and reruns from scratch on
+    # the surviving FS-only topology
+    rerun, _ = run_variant(n_steps=n_steps, with_bb=False, **kw)
+    abort_makespan = t_fail + rerun["makespan"]
+
+    report = {
+        "n_steps": n_steps,
+        "t_fail": t_fail,
+        "healthy": healthy,
+        "reroute": reroute,
+        "fs_only_rerun": rerun,
+        "abort_restart_makespan": abort_makespan,
+        "speedup_vs_abort_restart": abort_makespan / reroute["makespan"],
+        "reroute_beats_abort_restart":
+            reroute["makespan"] < abort_makespan,
+        "zero_lost_objects": reroute["n_lost_objects"] == 0,
+        "empty_schedule_launch_log_identical": parity,
+    }
+    assert reroute["n_lost_objects"] == 0, \
+        f"reroute lost {reroute['n_lost_objects']} objects"
+    assert reroute["n_residencies_on_dead_devices"] == 0, reroute
+    assert reroute["n_retried_tasks"] > 0, \
+        "the failure must actually hit in-flight work"
+    assert report["reroute_beats_abort_restart"], \
+        f"reroute {reroute['makespan']:.2f}s must beat abort+restart " \
+        f"{abort_makespan:.2f}s"
+    assert parity, "empty FailureSchedule must not perturb the launch log"
+    return report
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--out", default="BENCH_failures.json")
+    args = ap.parse_args(argv)
+    report = compare(n_steps=args.steps)
+    print("burst-buffer failure mid-drain "
+          f"(t_fail={report['t_fail']:.2f}s of "
+          f"{report['healthy']['makespan']:.2f}s healthy makespan):")
+    print(f"  reroute:       makespan {report['reroute']['makespan']:8.2f}s"
+          f"  retries {report['reroute']['n_retried_tasks']:2d}"
+          f"  lost objects {report['reroute']['n_lost_objects']}")
+    print(f"  abort+restart: makespan {report['abort_restart_makespan']:8.2f}s"
+          f"  (t_fail + {report['fs_only_rerun']['makespan']:.2f}s rerun)")
+    print(f"  reroute beats abort+restart "
+          f"{report['speedup_vs_abort_restart']:.2f}x; "
+          f"empty-schedule launch log identical: "
+          f"{report['empty_schedule_launch_log_identical']}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

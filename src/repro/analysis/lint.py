@@ -19,6 +19,7 @@ code       category         condition
 ``IO304``  race/ordering    manifest/commit not ordered after its shards
 ``IO401``  determinism      unseeded ``BurstyTraffic`` (irreproducible runs)
 ``IO402``  determinism      task body references an unseeded RNG source
+``IO501``  failure-domains  schedule leaves the durable tier offline forever
 =========  ===============  ====================================================
 
 Feasibility predicates are shared with the scheduler
@@ -40,7 +41,7 @@ from ..core.scheduler import eligible_devices
 from ..core.task import TaskInstance, TaskType
 
 CATEGORIES = {"1": "constraints", "2": "capacity", "3": "race/ordering",
-              "4": "determinism"}
+              "4": "determinism", "5": "failure-domains"}
 
 _MOVER_SIGS = ("tier_drain", "tier_prefetch")
 
@@ -492,6 +493,31 @@ def _rule_io402_rng_in_body(ctx: _Ctx) -> Iterator[Diagnostic]:
                         f"an argument", t)
 
 
+# --------------------------------------------------------------------------
+# IO5xx — failure domains
+# --------------------------------------------------------------------------
+def _rule_io501_durable_tier_killed(ctx: _Ctx) -> Iterator[Diagnostic]:
+    """The failure schedule takes every device of the catalog's durable
+    tier offline and never brings one back: eviction drains and emergency
+    re-drains have nowhere durable to land, so recovery queues forever
+    (the run ends in a SchedulerError, or quiesces with undurable data)."""
+    eng = getattr(ctx.rt, "failures", None)
+    if eng is None:
+        return
+    cat = ctx.catalog
+    if cat is None or not cat.enabled or cat.durable_tier is None:
+        return
+    devs = [d for d in ctx.cluster.devices if d.tier == cat.durable_tier]
+    if devs and all(eng.final_state(d) == "offline" for d in devs):
+        names = [d.name for d in devs]
+        yield Diagnostic(
+            "IO501",
+            f"the failure schedule leaves every device of the durable tier "
+            f"{cat.durable_tier!r} offline with no recovery ({names}): "
+            f"eviction drains and emergency re-drains have nowhere durable "
+            f"to land — add a recovery event or pick another durable_tier")
+
+
 _RULES = (
     _rule_io101_static_bw, _rule_io102_unknown_tier, _rule_io103_cpu_units,
     _rule_io104_auto_min,
@@ -500,6 +526,7 @@ _RULES = (
     _rule_io301_path_races, _rule_io302_read_after_discard,
     _rule_io303_payloadless_mover, _rule_io304_manifest_order,
     _rule_io401_unseeded_bursts, _rule_io402_rng_in_body,
+    _rule_io501_durable_tier_killed,
 )
 
 

@@ -90,10 +90,24 @@ class IOSanitizer:
                            f"resident objects sum to {total:.3f} MB but "
                            f"used_mb={dev.used_mb:.3f} "
                            f"({len(tuple(resident))} objects)")
+        # an offline device holds nothing: on_device_offline must have
+        # dropped every residency at the transition
+        for dev in cat.cluster.devices:
+            if dev.health != "offline":
+                continue
+            stale = cat._resident.get(id(dev))
+            if stale:
+                self._fail(backend,
+                           f"offline device {dev.name} still lists "
+                           f"{len(stale)} resident object(s): "
+                           f"{sorted(o.name for o in stale)}")
         # no scheduled reader on an evicted object: eviction must never
         # select an object a submitted-but-unfinished consumer will read
+        # (an object mid-recovery after a device failure is exempt — its
+        # readers are exactly what the lineage re-run will re-feed)
         for obj in cat.objects.values():
-            if obj.readers and not obj.residency and not obj.staging:
+            if obj.readers and not obj.residency and not obj.staging \
+                    and not obj.recovering:
                 self._fail(backend,
                            f"scheduled reader(s) {sorted(obj.readers)} on "
                            f"object {obj.name!r} with no residency left "

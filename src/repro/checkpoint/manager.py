@@ -22,6 +22,7 @@ import json
 import os
 import shutil
 import time
+import warnings
 from pathlib import Path
 from typing import Optional
 
@@ -51,15 +52,34 @@ def _drain_shard_task(frag, src_path, dst_path):
     return frag
 
 
+def _write_manifest_atomic(manifest_path, manifest: dict) -> None:
+    """Crash-atomic manifest publish: write tmp, fsync it, rename over the
+    final name, fsync the directory. Without the two fsyncs (copy_fsync's
+    pattern) "manifest-last" is not crash-consistent on a real FS — the
+    rename can be durable while the manifest bytes (or the directory entry)
+    are still only in the page cache, publishing a checkpoint a restart
+    cannot read."""
+    manifest_path = Path(manifest_path)
+    tmp = Path(str(manifest_path) + ".tmp")
+    with open(tmp, "w") as f:
+        f.write(json.dumps(manifest, indent=1))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, manifest_path)  # atomic: manifest-last commit
+    dfd = os.open(str(manifest_path.parent), os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+
+
 @io
 @task(returns=1)
 def _commit_task(manifest_path, step, frags, t0):
     frags = [f for f in frags]
     manifest = {"step": step, "shards": frags, "version": 1,
                 "save_seconds": time.monotonic() - t0}
-    tmp = Path(str(manifest_path) + ".tmp")
-    tmp.write_text(json.dumps(manifest, indent=1))
-    os.replace(tmp, manifest_path)  # atomic: manifest-last commit
+    _write_manifest_atomic(manifest_path, manifest)
     return manifest
 
 
@@ -78,7 +98,8 @@ class CheckpointManager:
 
     def __init__(self, directory, n_shards: int = 8,
                  overrun_policy: str = "skip", keep: int = 3,
-                 fast_dir=None, drain_bw=None, fast_keep=None):
+                 fast_dir=None, drain_bw=None, fast_keep=None,
+                 fast_tier: str = "bb"):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
@@ -91,7 +112,19 @@ class CheckpointManager:
         if fast_keep is not None and fast_keep < 0:
             raise ValueError(f"fast_keep must be >= 0, got {fast_keep}")
         self.fast_keep = min(keep, 1) if fast_keep is None else int(fast_keep)
+        self.fast_tier = fast_tier  # tier label backing fast_dir: when every
+        #                             device of it is offline, saves reroute
+        #                             shards to the shared FS directly
         self._in_flight = None  # (step, commit future)
+
+    def _fast_tier_offline(self, rt) -> bool:
+        """True when the cluster models the fast tier and every device
+        backing it is offline — writing the burst there would just fail
+        into retries that can never land, so ``save`` reroutes."""
+        if rt is None:
+            return False
+        devs = [d for d in rt.cluster.devices if d.tier == self.fast_tier]
+        return bool(devs) and all(d.health == "offline" for d in devs)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, sync: bool = False) -> bool:
@@ -117,14 +150,17 @@ class CheckpointManager:
                      for i, entries in enumerate(plan) if entries]
             manifest = {"step": step, "shards": frags, "version": 1,
                         "save_seconds": time.monotonic() - t0}
-            tmp = step_dir / "MANIFEST.json.tmp"
-            tmp.write_text(json.dumps(manifest, indent=1))
-            os.replace(tmp, step_dir / "MANIFEST.json")
-        elif self.fast_dir is None:
+            _write_manifest_atomic(step_dir / "MANIFEST.json", manifest)
+        elif self.fast_dir is None or self._fast_tier_offline(rt):
+            # flat mode — also the failure-domain reroute: with the fast
+            # tier dead, shards write straight to the durable directory
+            # (fs-hinted so the scheduler charges the shared FS device)
+            fs_hint = "fs" if self.fast_dir is not None \
+                and rt.cluster.has_tier("fs") else None
             futs = [_write_shard_task(str(step_dir / f"shard_{i:04d}.bin"),
                                       entries,
                                       io_mb=sum(a.nbytes for _, a in entries)
-                                      / 1e6)
+                                      / 1e6, storage_tier=fs_hint)
                     for i, entries in enumerate(plan) if entries]
             commit = _commit_task(step_dir / "MANIFEST.json", step, futs, t0)
             self._in_flight = (step, commit)
@@ -177,13 +213,61 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def _check_step_durable(self, step: int) -> Optional[BaseException]:
+        """Verify every shard the manifest names exists with the declared
+        size; returns the violation (an IOError) or None when intact. A
+        vanished shard (fast-tier loss after a partial drain) used to
+        surface as a raw FileNotFoundError out of ``restore``."""
+        step_dir = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((step_dir / "MANIFEST.json").read_text())
+        except (OSError, json.JSONDecodeError, ValueError) as e:
+            return IOError(f"step {step}: unreadable manifest ({e})")
+        for frag in manifest["shards"]:
+            path = step_dir / frag["file"]
+            if not path.exists():
+                return IOError(
+                    f"shard {path} missing (manifest names it with "
+                    f"{frag['total_bytes']} bytes)")
+            size = path.stat().st_size
+            if size != frag["total_bytes"]:
+                return IOError(f"shard {path} truncated: "
+                               f"{size} != {frag['total_bytes']}")
+        return None
+
     def restore(self, like_tree, step: Optional[int] = None,
                 shardings=None):
         """Rebuild the pytree; if ``shardings`` given, device_put each leaf
-        with its (possibly different-mesh) sharding — elastic restart."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        with its (possibly different-mesh) sharding — elastic restart.
+
+        Every candidate step is verified shard-complete before it is read;
+        when the newest step is torn (a shard vanished or truncated — e.g.
+        fast-tier loss after a partial drain) and no explicit ``step`` was
+        requested, restore warns and falls back to the next-older durable
+        step instead of crashing."""
+        if step is not None:
+            candidates = [step]
+        else:
+            candidates = list(reversed(self.steps()))
+        if not candidates:
             raise FileNotFoundError(f"no valid checkpoint under {self.dir}")
+        chosen = None
+        err: Optional[BaseException] = None
+        for i, s in enumerate(candidates):
+            e = self._check_step_durable(s)
+            if e is None:
+                chosen = s
+                if i > 0:
+                    warnings.warn(
+                        f"checkpoint step {candidates[0]} is torn ({err}); "
+                        f"falling back to older durable step {s}",
+                        RuntimeWarning, stacklevel=2)
+                break
+            if err is None:
+                err = e
+        if chosen is None:
+            raise err  # newest (or requested) step torn, nothing older
+        step = chosen
         step_dir = self.dir / f"step_{step:08d}"
         manifest = json.loads((step_dir / "MANIFEST.json").read_text())
         by_key: dict = {}

@@ -12,6 +12,7 @@ from .backends import RealBackend, SimBackend
 from .constraints import AutoSpec, StaticSpec, parse_storage_bw
 from .datalife import (DataCatalog, DataObject, EvictionPolicy,
                        LifecycleConfig, LRUEviction, TierCapacity)
+from .failures import FailureEngine, FailureEvent, FailureSchedule
 from .interference import (Burst, BurstyTraffic, ConstantTraffic,
                            InterferenceEngine, TraceTraffic, TrafficModel)
 from .resources import Cluster, StorageDevice, WorkerNode
@@ -46,6 +47,7 @@ __all__ = [
     "LRUEviction", "TierCapacity",
     "Burst", "BurstyTraffic", "ConstantTraffic", "DriftConfig",
     "InterferenceEngine", "TraceTraffic", "TrafficModel",
+    "FailureEngine", "FailureEvent", "FailureSchedule",
     "aggregate_throughput", "per_task_rate", "expected_task_time",
     "max_concurrent_tasks", "cross_tier_time", "read_floor_time",
 ]

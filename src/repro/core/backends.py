@@ -85,6 +85,9 @@ class SimBackend(Backend):
         # co-tenant traffic (interference.py); None keeps every code path —
         # and all arithmetic — identical to the interference-free simulator
         self.interference = None
+        # failure domains (failures.py); None (or an empty schedule) keeps
+        # the simulator byte-identical to a failure-free run
+        self.failures = None
         # IOSan (repro.analysis.sanitizer): event-boundary invariant checks.
         # All checks are pure reads, so sanitize=True leaves the launch log
         # bit-identical; None costs one comparison per loop iteration.
@@ -117,6 +120,17 @@ class SimBackend(Backend):
             # bursts starting at the current clock (t=0 co-tenants) must
             # hold their budgets before the first schedule pass runs
             self.interference.apply_due(self.clock)
+
+    def attach_failures(self, engine) -> None:
+        """Bind a FailureEngine: scheduled health transitions become
+        simulation events, peer to the interference engine's bursts."""
+        self.failures = engine if engine is not None and engine.active \
+            else None
+        if self.failures is not None:
+            # t=0 events (a tier down from the start) take effect before
+            # the first schedule pass; nothing is running or resident yet,
+            # so the transitions need no reroute/re-drain handling
+            self.failures.apply_due(self.clock)
 
     # ---------------------------------------------------------- event queue
     def _push_entry(self, tid: int, est: float) -> None:
@@ -277,6 +291,63 @@ class SimBackend(Backend):
         due_io.sort(key=lambda t: t._sim_seq)
         return due_c + due_io
 
+    # ------------------------------------------------------ failure domains
+    def _fail_attempt(self, task: TaskInstance, error: BaseException) -> bool:
+        """One attempt of ``task`` failed (injected fault or its device went
+        offline). While attempts remain (``maxRetries``, same arithmetic as
+        RealBackend._run: ``max_retries + 1`` attempts, ``task.retries``
+        counting failed ones) the task re-enters the ready queue for a
+        fresh grant — on a surviving eligible device — and True is
+        returned; otherwise the task is FAILED and False is returned (the
+        caller resolves futures and hands it to the runtime)."""
+        task.retries += 1
+        if task.retries <= task.defn.max_retries:
+            if self.sanitizer is not None:
+                self.sanitizer.record(
+                    "retry", t=self.clock, tid=task.tid,
+                    sig=task.defn.signature, attempt=task.retries)
+            self.runtime._requeue_retry(task)
+            return True
+        task.state = TaskState.FAILED
+        if task.error is None:
+            task.error = error
+        return False
+
+    def _on_failure_transitions(self, transitions) -> None:
+        """Health transitions just fired: fail in-flight I/O on newly
+        offline devices into the retry path, then let the runtime drop
+        lost residencies and synthesize re-drains/lineage recovery."""
+        rt = self.runtime
+        san = self.sanitizer
+        offline = []
+        for dev, prev, new in transitions:
+            if san is not None:
+                san.record("health", t=self.clock, device=dev.name,
+                           prev=prev, state=new)
+            if new == "offline" and prev != "offline":
+                offline.append(dev)
+        for dev in offline:
+            entry = self._dev_tasks.get(id(dev))
+            if entry is None or not entry[1]:
+                continue
+            # deterministic order: launch order, like _pop_due
+            tids = sorted(entry[1], key=lambda tid: self._io[tid][0]._sim_seq)
+            for tid in tids:
+                task = self._finish_io(tid)
+                task.end_time = self.clock
+                err = RuntimeError(
+                    f"device {dev.name} went offline under "
+                    f"{task.defn.name}#{task.tid}")
+                if self._fail_attempt(task, err):
+                    continue
+                for f in task.futures:
+                    f.set_value(None)
+                rt._handle_completion(task)
+        if offline:
+            rt._on_health_change(offline)
+        rt.scheduler._dirty = True
+        self._refresh_stale_devices()
+
     #: in the nothing-running branch, at most this many consecutive burst
     #: boundaries are stepped through looking for one that unblocks a grant
     #: before the scheduler is declared stuck (bounds the wait on infinite
@@ -300,9 +371,27 @@ class SimBackend(Backend):
         self.runtime._lifecycle_tick()
         return True
 
+    def _fail_step(self, feng) -> bool:
+        """Advance to the next scheduled health transition and apply it
+        (nothing of ours is running): a recovery can make a pinned tier's
+        devices eligible again and unblock the queued class."""
+        t = feng.next_time()
+        if t == float("inf"):
+            return False
+        if t > self.clock:
+            self._advance_to(t)
+        transitions = feng.apply_due(self.clock)
+        if transitions:
+            self._on_failure_transitions(transitions)
+        self._refresh_stale_devices()
+        self.runtime.scheduler._dirty = True
+        self.runtime._lifecycle_tick()
+        return True
+
     def drain(self, predicate: Callable[[], bool]) -> None:
         rt = self.runtime
         eng = self.interference
+        feng = self.failures
         bg_retries = 0
         san = self.sanitizer
         while True:
@@ -329,9 +418,10 @@ class SimBackend(Backend):
                     try:
                         rt.scheduler.assert_not_stuck()
                     except SchedulerError:
-                        if eng is not None \
-                                and bg_retries < self._BG_STUCK_LIMIT \
-                                and self._bg_step(eng):
+                        if bg_retries < self._BG_STUCK_LIMIT and (
+                                (eng is not None and self._bg_step(eng))
+                                or (feng is not None
+                                    and self._fail_step(feng))):
                             bg_retries += 1
                             continue
                         raise
@@ -345,25 +435,34 @@ class SimBackend(Backend):
             t = self._next_event_time()
             if eng is not None:
                 t = min(t, eng.next_time())
+            if feng is not None:
+                t = min(t, feng.next_time())
             if t == float("inf"):
                 raise SchedulerError("no next event with tasks running")
             self._advance_to(t)
             for task in self._pop_due():
                 task.end_time = self.clock
+                fail_spec = task.sim.fail
+                # sim_fail=True fails every attempt; sim_fail=N only the
+                # first N (task.retries counts failed attempts so far)
+                inject = fail_spec is True or \
+                    (fail_spec and task.retries < int(fail_spec))
                 if san is not None:
                     san.record("complete", t=self.clock, tid=task.tid,
                                sig=task.defn.signature,
-                               failed=bool(task.sim.fail))
-                if task.sim.fail:
-                    # fault injection (sim_fail=True at call time): the task
-                    # consumed its resources and time, then FAILs — the
-                    # runtime cancels its data-descendants. Non-raising:
-                    # post-mortem inspection happens via graph states.
-                    task.state = TaskState.FAILED
-                    if task.error is None:
-                        task.error = RuntimeError(
+                               failed=bool(inject))
+                if inject:
+                    # fault injection (sim_fail= at call time): the task
+                    # consumed its resources and time, then this attempt
+                    # FAILs — retried under maxRetries exactly like
+                    # RealBackend (a re-placement is a fresh grant); once
+                    # attempts are exhausted the runtime cancels its
+                    # data-descendants. Non-raising: post-mortem inspection
+                    # happens via graph states.
+                    if self._fail_attempt(task, RuntimeError(
                             f"injected failure: "
-                            f"{task.defn.name}#{task.tid}")
+                            f"{task.defn.name}#{task.tid}")):
+                        continue
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
@@ -373,6 +472,15 @@ class SimBackend(Backend):
                 # watermark trigger eviction planning
                 rt.scheduler._dirty = True
                 rt._lifecycle_tick()
+            if feng is not None:
+                # health transitions at this instant: completions at t won
+                # the tie (a task that finishes as its device dies counts
+                # as finished), then in-flight work on dead devices fails
+                # into the retry path and the catalog starts recovery
+                transitions = feng.apply_due(self.clock)
+                if transitions:
+                    self._on_failure_transitions(transitions)
+                    rt._lifecycle_tick()
             self._refresh_stale_devices()  # releases raised device rates
             if san is not None:
                 san.check(self)  # event boundary: completions + bursts done

@@ -132,6 +132,9 @@ class DataObject:
         self._open_reads: dict[int, list] = {}  # tid -> its open log record
         self.staging: dict[str, object] = {}  # tier -> in-flight prefetch fut
         self.evicting: bool = False
+        self.recovering: bool = False  # failure recovery in flight (redrain
+        #                                or lineage re-run): exempt from
+        #                                eviction until the copy lands
 
     def begin_read(self, tid: int, t: float) -> None:
         self.readers.add(tid)
@@ -306,6 +309,9 @@ class DataCatalog:
         # mover_fut}); the future is retained so a reused id can't alias
         self._deferred_stage: dict[int, tuple] = {}
         self.events: list[dict] = []                 # eviction audit log
+        self.lost_objects: list[DataObject] = []     # unrecoverable after a
+        #                                              device failure (no
+        #                                              copy, no lineage)
         self.n_prefetches = 0
         self.n_evictions = 0
         self.n_discards = 0
@@ -373,6 +379,10 @@ class DataCatalog:
             raise ValueError(
                 f"external object {name!r}: tier {tier!r} not present "
                 f"(available: {self._tier_order})")
+        if dev.health == "offline":
+            # prefer a surviving device of the tier over the representative
+            dev = next((d for d in self.cluster.devices if d.tier == tier
+                        and d.health != "offline"), dev)
         obj = DataObject(name, size_mb, pinned=pinned, created=self.now())
         if charge:
             if not dev.can_reserve_capacity(size_mb):
@@ -516,6 +526,8 @@ class DataCatalog:
                 self._finish_stage(task, obj, tag[2], failed)
             elif kind == "evict":
                 self._finish_evict(task, obj, tag[2], failed)
+            elif kind in ("redrain", "recover"):
+                self._finish_recovery(task, obj, failed)
             return
         if not failed and task.is_io and task.sim.io_bytes > 0 \
                 and task.device is not None:
@@ -555,7 +567,14 @@ class DataCatalog:
                       failed: bool) -> None:
         obj.staging.pop(tier, None)
         if not failed and task.device is not None:
-            self._add_residency(obj, task.device)
+            if obj.residency.get(task.device.tier) is task.device:
+                # a lineage recovery (or competing mover) landed this copy
+                # while the stage was in flight — e.g. retried across a
+                # device outage; the scheduler's commit for this mover
+                # would double-count the single resident copy
+                task.device.free_capacity(task.sim.io_bytes)
+            else:
+                self._add_residency(obj, task.device)
 
     # ------------------------------------- prefetch under producer pipelining
     def wants_deferred_stage(self, fut, target_tier: str) -> bool:
@@ -648,7 +667,7 @@ class DataCatalog:
     def _evictable(self, dev: StorageDevice) -> list[DataObject]:
         return [o for o in self._resident.get(id(dev), ())
                 if not o.pinned and not o.readers and not o.evicting
-                and not o.staging]
+                and not o.staging and not o.recovering]
 
     def plan_evictions(self, demand_mb: Optional[dict] = None
                        ) -> list[EvictionAction]:
@@ -725,8 +744,66 @@ class DataCatalog:
         if task.device is not None:
             self._add_residency(obj, task.device)
         self._record_eviction(obj, dev, mode="drain")
-        dev.free_capacity(obj.size_mb)
-        self._drop_residency(obj, dev)
+        if obj.residency.get(dev.tier) is dev:
+            # the copy can already be gone: the device went offline mid-
+            # drain and on_device_offline dropped it (freeing the capacity)
+            dev.free_capacity(obj.size_mb)
+            self._drop_residency(obj, dev)
+
+    def _finish_recovery(self, task: TaskInstance, obj: DataObject,
+                         failed: bool) -> None:
+        """Emergency re-drain / lineage re-run completion: the restored
+        copy becomes residency of the *original* object (no new object is
+        minted) and the object leaves its recovering state. A failed
+        attempt (retries exhausted) leaves whatever copies survive."""
+        obj.recovering = False
+        if failed or task.device is None:
+            return
+        if obj.residency.get(task.device.tier) is not task.device:
+            self._add_residency(obj, task.device)
+        else:
+            # an in-flight stage/mover beat the recovery to this device:
+            # one resident copy, so one committed footprint
+            task.device.free_capacity(task.sim.io_bytes)
+        for f in task.futures:
+            self.map_future(f, obj)
+
+    # ------------------------------------------------------ failure domains
+    def on_device_offline(self, dev: StorageDevice
+                          ) -> tuple[list[DataObject], list[DataObject]]:
+        """A device died (failures.py): every copy it held is gone. Drop
+        the residencies — freeing the modelled occupancy so a recovered
+        device starts empty — and classify the damage:
+
+        * **orphans**: objects whose ONLY copy lived on ``dev``; they need
+          a lineage re-run (``IORuntime._recover_object``);
+        * **at_risk**: objects that keep a surviving copy on another tier
+          but lost their durable-tier copy; they need an emergency
+          re-drain (``IORuntime._issue_redrain``).
+
+        Returns ``(orphans, at_risk)``, each in object-creation order.
+        """
+        if not self.enabled:
+            return [], []
+        orphans: list[DataObject] = []
+        at_risk: list[DataObject] = []
+        for obj in sorted(self._resident.get(id(dev), set()),
+                          key=lambda o: o.oid):
+            dev.free_capacity(obj.size_mb)
+            self._drop_residency(obj, dev)
+            self.events.append({
+                "time": self.now(), "oid": obj.oid, "name": obj.name,
+                "size_mb": obj.size_mb, "tier": dev.tier,
+                "device": dev.name, "mode": "lost",
+                "readers": len(obj.readers),
+                "durable": self.durable_tier in obj.residency,
+                "pinned": obj.pinned, "ephemeral": obj.ephemeral,
+            })
+            if not obj.residency:
+                orphans.append(obj)
+            elif dev.tier == self.durable_tier and not obj.ephemeral:
+                at_risk.append(obj)
+        return orphans, at_risk
 
     def _record_eviction(self, obj: DataObject, dev: StorageDevice,
                          mode: str) -> None:
@@ -751,6 +828,7 @@ class DataCatalog:
             "n_deferred_stages": self.n_deferred_stages,
             "n_evictions": self.n_evictions,
             "n_discards": self.n_discards,
+            "n_lost_objects": len(self.lost_objects),
             "bytes_prefetched_mb": self.bytes_prefetched_mb,
             "bytes_evicted_mb": self.bytes_evicted_mb,
             "occupancy": {

@@ -87,10 +87,50 @@ class StorageDevice:
         self.background_streams: int = 0
         self.background_bw: float = 0.0  # MB/s currently held by co-tenants
         self.background_mb: float = 0.0  # capacity currently held (MB)
+        # --- failure-domain health state (failures.py) ---
+        # healthy -> degraded(bw_factor) -> offline, driven by a
+        # FailureSchedule; healthy keeps every accounting path (and all
+        # simulator arithmetic) identical to a pre-failure-domain device.
+        self.health: str = "healthy"
+        self.bw_factor: float = 1.0      # effective-bandwidth fraction
+        #                                  while degraded (1.0 otherwise)
+
+    # -- failure-domain health (failures.py) ---------------------------------
+    @property
+    def effective_bandwidth(self) -> float:
+        """The bandwidth the device can actually deliver in its current
+        health state: 0 offline, ``bw_factor * bandwidth`` degraded."""
+        if self.health == "offline":
+            return 0.0
+        return self.bandwidth * self.bw_factor
+
+    def set_health(self, state: str, bw_factor: float = 1.0) -> None:
+        """Transition the device's health. Any transition can change the
+        achievable rate in either direction, so both epochs bump — the
+        simulator re-checks every cached finish-time estimate."""
+        if state not in ("healthy", "degraded", "offline"):
+            raise ValueError(f"unknown health state {state!r}")
+        if state == "degraded":
+            if not (0.0 < bw_factor <= 1.0):
+                raise ValueError(
+                    f"degraded bw_factor must be in (0, 1], got {bw_factor}")
+            self.bw_factor = bw_factor
+        else:
+            self.bw_factor = 1.0
+        self.health = state
+        self.rate_epoch += 1
+        self.release_epoch += 1
 
     # -- budget accounting (scheduler-facing) --------------------------------
     def can_allocate(self, bw: float) -> bool:
-        return bw <= self.available_bw + 1e-9
+        if self.health == "healthy":
+            return bw <= self.available_bw + 1e-9
+        if self.health == "offline":
+            return False
+        # degraded: the lost fraction of the nameplate budget is not
+        # allocatable — grants must fit under what the device can deliver
+        lost = self.bandwidth - self.effective_bandwidth
+        return bw <= self.available_bw - lost + 1e-9
 
     def allocate(self, bw: float) -> None:
         if not self.can_allocate(bw):
@@ -115,7 +155,13 @@ class StorageDevice:
         the allocatable budget — clamped to what is actually free, so the
         scheduler's own grants are never invalidated. Returns the bandwidth
         actually taken (pass it back to :meth:`remove_background`)."""
-        taken = min(max(bw, 0.0), self.available_bw)
+        headroom = self.available_bw
+        if self.health == "offline":
+            headroom = 0.0
+        elif self.health == "degraded":
+            headroom = max(
+                0.0, headroom - (self.bandwidth - self.effective_bandwidth))
+        taken = min(max(bw, 0.0), headroom)
         self.available_bw -= taken
         self.background_bw += taken
         self.background_streams += max(int(streams), 0)
@@ -142,7 +188,7 @@ class StorageDevice:
         cannot overfill the device, but by shrinking free capacity it can
         push occupancy over the eviction watermarks and capacity-block our
         grants. Returns the MB actually taken."""
-        if self.capacity_gb is None or mb <= 0:
+        if self.capacity_gb is None or mb <= 0 or self.health == "offline":
             return 0.0
         taken = min(mb, self.free_capacity_mb())
         if taken <= 0:
@@ -254,6 +300,16 @@ class StorageDevice:
                 f"capacity {cap:.0f} MB (used={self.used_mb:.3f}, "
                 f"reserved={self.reserved_mb:.3f}, "
                 f"background={self.background_mb:.3f})")
+        if self.health not in ("healthy", "degraded", "offline"):
+            out.append(f"{self.name}: unknown health state {self.health!r}")
+        if not (0.0 < self.bw_factor <= 1.0):
+            out.append(
+                f"{self.name}: bw_factor {self.bw_factor} outside (0, 1]")
+        if self.health == "offline" and self.active_io > 0:
+            out.append(
+                f"{self.name}: offline device still has "
+                f"{self.active_io} active I/O task(s) — in-flight work "
+                f"must fail into the retry path on transition")
         return out
 
     def reset(self):
@@ -268,6 +324,8 @@ class StorageDevice:
         self.background_streams = 0
         self.background_bw = 0.0
         self.background_mb = 0.0
+        self.health = "healthy"
+        self.bw_factor = 1.0
 
 
 @dataclass

@@ -53,10 +53,11 @@ from .autotune import DriftConfig
 from .backends import Backend, RealBackend, SimBackend
 from .constraints import parse_storage_bw
 from .datalife import DataCatalog, LifecycleConfig
+from .failures import FailureEngine
 from .interference import InterferenceEngine
 from .graph import TaskGraph, _param_names
 from .resources import Cluster
-from .scheduler import Scheduler
+from .scheduler import Scheduler, eligible_devices
 from .storage_model import read_floor_time
 from .task import (Direction, Future, SimSpec, TaskDef, TaskInstance,
                    TaskState, TaskType, resolved_future)
@@ -104,8 +105,15 @@ class TaskFunction:
             raise ValueError(
                 f"task {self.defn.name!r}: duration must be non-negative "
                 f"(got {duration})")
-        sim = SimSpec(duration=duration, io_bytes=io_mb,
-                      fail=bool(reserved["sim_fail"]))
+        fail_spec = reserved["sim_fail"]
+        # booleans stay booleans (True: every attempt fails); an int N is
+        # preserved so only the first N attempts fail — with maxRetries >= N
+        # the task eventually succeeds (SimSpec.fail)
+        if fail_spec is None or isinstance(fail_spec, bool):
+            fail_spec = bool(fail_spec)
+        else:
+            fail_spec = int(fail_spec)
+        sim = SimSpec(duration=duration, io_bytes=io_mb, fail=fail_spec)
         bw_override = reserved["storage_bw"]
         if rt is None:
             return self.defn.fn(*args, **kwargs)
@@ -201,11 +209,28 @@ def _make_mover(name: str) -> TaskFunction:
             return copy_fsync(src_path, dst_path)
         return data
     _move.__name__ = name
-    return io(task(returns=1)(_move))
+    # movers are the durability path (eviction drains, emergency re-drains):
+    # a transient device failure must not strand an object undurable
+    return constraint(maxRetries=2)(io(task(returns=1)(_move)))
 
 
 _drain_task = _make_mover("tier_drain")
 _prefetch_task = _make_mover("tier_prefetch")
+
+
+def _make_recovery_task() -> TaskFunction:
+    """Lineage re-run: when a device failure orphans an object (every copy
+    lost), the runtime re-executes the producer's work under this synthetic
+    signature with the producer's recorded execution model (duration,
+    io_mb). SimBackend never runs the body; under RealBackend lineage
+    recovery is bookkeeping-only (DataObject carries no path)."""
+    def _recover(inputs):
+        return inputs
+    _recover.__name__ = "lineage_recover"
+    return constraint(maxRetries=2)(io(task(returns=1)(_recover)))
+
+
+_recover_task = _make_recovery_task()
 
 
 class IORuntime:
@@ -249,6 +274,7 @@ class IORuntime:
                  scheduler_cls=Scheduler,
                  lifecycle: Optional[LifecycleConfig] = None,
                  interference=None,
+                 failures=None,
                  drift: Optional[DriftConfig] = None,
                  tier_objective: bool = False):
         self.cluster = cluster
@@ -256,7 +282,8 @@ class IORuntime:
         # sibling with the same lifecycle/interference/tuning setup
         self._plan_config = dict(scheduler_cls=scheduler_cls,
                                  lifecycle=lifecycle,
-                                 interference=interference, drift=drift,
+                                 interference=interference,
+                                 failures=failures, drift=drift,
                                  tier_objective=tier_objective)
         if isinstance(backend, str):
             if backend == "capture":
@@ -305,6 +332,27 @@ class IORuntime:
         # plan() replays the *resolved* engine (an iterable argument was
         # consumed above; None when inactive, which has nothing to analyze)
         self._plan_config["interference"] = self.interference
+        # tier failure domains (failures.py): a FailureEngine, a
+        # FailureSchedule, or an iterable of (t, target, state[, bw_factor])
+        # events. Simulation only — a real cluster fails on its own.
+        self.failures = None
+        if failures is not None:
+            feng = failures if isinstance(failures, FailureEngine) \
+                else FailureEngine(failures, cluster)
+            if feng.active:
+                if self.capture_mode:
+                    # recorded for the analyzer (IO501 reads the schedule);
+                    # never attached — capture flips no device health
+                    self.failures = feng
+                elif not isinstance(backend, SimBackend):
+                    raise ValueError(
+                        "failure injection drives device health in the "
+                        "simulator; it is not supported on "
+                        f"{type(backend).__name__}")
+                else:
+                    backend.attach_failures(feng)
+                    self.failures = feng
+        self._plan_config["failures"] = self.failures
         # capture mode constructs non-strict: lifecycle config errors are
         # recorded (diagnostic IO204) instead of raising, so a plan a live
         # runtime would refuse can still be analyzed
@@ -316,6 +364,7 @@ class IORuntime:
             if set_catalog is not None:
                 set_catalog(self.catalog)
         self._in_tick = False
+        self._recovering = {}  # oid -> in-flight lineage-recovery Future
         self.backend.bind(self)
         self._entered = False
         if forced:
@@ -395,8 +444,9 @@ class IORuntime:
         cat = self.catalog
         if not cat.enabled or not cat.config.auto_prefetch:
             return args, kwargs
-        if defn.signature in ("tier_drain", "tier_prefetch"):
-            return args, kwargs  # movers move data; they are never staged
+        if defn.signature in ("tier_drain", "tier_prefetch",
+                              "lineage_recover"):
+            return args, kwargs  # movers/recovery move data; never staged
         order = cat.cluster.tier_names()
         target = storage_tier or defn.storage_tier or \
             (order[0] if order else None)
@@ -449,6 +499,16 @@ class IORuntime:
         # capacity reservation: residency registration, reader release,
         # stage/evict mover resolution
         self.catalog.on_task_done(task, failed=failed)
+        tag = getattr(task, "_datalife", None)
+        if tag is not None and tag[0] == "recover":
+            obj = tag[1]
+            self._recovering.pop(obj.oid, None)
+            # a lineage re-run restores a copy, not necessarily durability:
+            # chain the emergency re-drain if the durable tier still lacks one
+            if not failed and not obj.ephemeral and \
+                    self.catalog.durable_tier is not None and \
+                    self.catalog.durable_tier not in obj.residency:
+                self._issue_redrain(obj)
         if not failed:
             newly_ready = self.graph.complete(task)
             if newly_ready:
@@ -463,6 +523,103 @@ class IORuntime:
             if newly_ready:
                 self.scheduler.make_ready_many(newly_ready)
         self._lifecycle_tick()
+
+    # -------------------------------------------------------- fault tolerance
+    def _requeue_retry(self, task: TaskInstance) -> None:
+        """Return a failed attempt to the ready queue (SimBackend retry
+        path, mirroring RealBackend's in-worker loop): the scheduler
+        releases the grant, placement state is wiped, and the task re-enters
+        readiness as a *fresh* grant — attempt N+1 may land on a different
+        device, constraint, or tier than attempt N. Called under the
+        runtime lock."""
+        self.scheduler.on_retry(task)
+        task.worker = None
+        task.device = None
+        task.granted_bw = 0.0
+        task.reserved_mb = 0.0
+        task.read_penalty = 0.0
+        task.epoch = None
+        task.tuner_key = None
+        task.error = None
+        if task.tier is not None and \
+                not eligible_devices(self.cluster, task.tier):
+            # the pinned tier went entirely offline: fall back to
+            # tier-agnostic placement so the retry can land on a survivor
+            task.tier = None
+        task.state = TaskState.READY
+        self.scheduler.make_ready(task)
+
+    def _on_health_change(self, offline) -> None:
+        """Devices went offline (FailureEngine transition, SimBackend):
+        drop the residencies that died with them and synthesize recovery
+        work. Called under the runtime lock, after in-flight I/O on the
+        dead devices has failed into the retry path."""
+        cat = self.catalog
+        if not cat.enabled:
+            return
+        for dev in offline:
+            orphans, at_risk = cat.on_device_offline(dev)
+            for obj in at_risk:
+                self._issue_redrain(obj)
+            for obj in orphans:
+                self._recover_object(obj)
+
+    def _issue_redrain(self, obj) -> None:
+        """Emergency re-drain: the object's only durable copy died with its
+        device but a surviving copy exists on a faster tier — write it back
+        so the object is durable again. If the durable tier is entirely
+        offline the drain queues until a recovery event (lint IO501 flags a
+        schedule that kills it permanently)."""
+        cat = self.catalog
+        to_tier = cat.durable_tier
+        if to_tier is None or to_tier in obj.residency or obj.recovering:
+            return
+        src = obj.fastest_tier(cat.tier_rank)
+        if src is None:
+            return
+        obj.recovering = True
+        fut = self.drain(None, to_tier=to_tier, from_tier=src,
+                         io_mb=obj.size_mb)
+        fut.task._datalife = ("redrain", obj)
+        self.scheduler._dirty = True
+
+    def _recover_object(self, obj):
+        """Lineage re-run for an orphaned object (every copy lost): re-
+        execute the producer's recorded work, recursively recovering any
+        of its tracked inputs that are also gone. Ephemeral objects nobody
+        will read again are dropped silently; objects with no recorded
+        producer (externals) are unrecoverable and land in
+        ``catalog.lost_objects``. Returns the in-flight recovery Future
+        (deduplicated per object), or None."""
+        cat = self.catalog
+        fut = self._recovering.get(obj.oid)
+        if fut is not None:
+            return fut
+        if obj.ephemeral and not obj.readers:
+            return None  # rt.discard temp data: nothing worth re-running
+        producer = self.graph.tasks.get(obj.producer_tid)
+        if producer is None:
+            # external dataset or untracked producer: lineage is gone
+            cat.lost_objects.append(obj)
+            return None
+        deps = []
+        for inp in cat.input_objects(producer):
+            if inp.residency:
+                continue  # a surviving copy feeds the re-run directly
+            f = self._recover_object(inp)
+            if f is not None:
+                deps.append(f)
+        tier = producer.tier
+        if tier is not None and not eligible_devices(self.cluster, tier):
+            tier = None  # the producer's tier died too: land anywhere alive
+        obj.recovering = True
+        sim = SimSpec(duration=producer.sim.duration, io_bytes=obj.size_mb)
+        fut = self.submit(_recover_task.defn, (deps,), {}, sim,
+                          storage_tier=tier)
+        fut.task._datalife = ("recover", obj)
+        self._recovering[obj.oid] = fut
+        self.scheduler._dirty = True
+        return fut
 
     # --------------------------------------------------------- data lifecycle
     def _lifecycle_tick(self) -> bool:
@@ -682,6 +839,7 @@ class IORuntime:
                         scheduler_cls=cfg["scheduler_cls"],
                         lifecycle=cfg["lifecycle"],
                         interference=cfg["interference"],
+                        failures=cfg["failures"],
                         drift=cfg["drift"],
                         tier_objective=cfg["tier_objective"])
         prev = getattr(_current, "rt", None)
@@ -716,6 +874,8 @@ class IORuntime:
             out["lifecycle"] = self.catalog.summary()
         if self.interference is not None:
             out["interference"] = self.interference.summary()
+        if self.failures is not None:
+            out["failures"] = self.failures.summary()
         be = self.backend
         if isinstance(be, SimBackend):
             out.update({

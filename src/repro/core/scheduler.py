@@ -53,13 +53,18 @@ class SchedulerError(RuntimeError):
     pass
 
 
-def eligible_devices(cluster: Cluster,
-                     tier: Optional[str]) -> list[StorageDevice]:
+def eligible_devices(cluster: Cluster, tier: Optional[str],
+                     healthy_only: bool = True) -> list[StorageDevice]:
     """Distinct devices a task with tier hint ``tier`` may ever be granted
     on (every tier of every worker when unhinted; shared devices appear
     once). Shared between submission-time class validation below and the
     static plan analyzer (repro.analysis.lint), so a lint diagnostic and a
-    runtime ``SchedulerError`` can never disagree about placeability."""
+    runtime ``SchedulerError`` can never disagree about placeability.
+
+    Health-aware (failures.py): offline devices are not eligible — the
+    scheduler never grants to them, and lint agrees. Degraded devices stay
+    eligible (degradation is transient; nameplate bandwidth still bounds
+    feasibility). ``healthy_only=False`` restores the raw topology view."""
     seen: set[int] = set()
     out: list[StorageDevice] = []
     for w in cluster.workers:
@@ -69,6 +74,8 @@ def eligible_devices(cluster: Cluster,
             d = w.tier_device(tier)
             devs = [d] if d is not None else []
         for d in devs:
+            if healthy_only and d.health == "offline":
+                continue
             if id(d) not in seen:
                 seen.add(id(d))
                 out.append(d)
@@ -194,8 +201,9 @@ class Scheduler:
             if w.learning_owner is not None:
                 continue
             dev = self._tier_on(w, tier)
-            if dev is None or id(dev) in self._learning_dev_ids:
-                continue  # tier absent, or another tuner calibrates there
+            if dev is None or id(dev) in self._learning_dev_ids \
+                    or dev.health == "offline":
+                continue  # tier absent, under calibration, or failed
             w.learning_owner = key
             self.learning_nodes[key] = w
             self.learning_devices[key] = dev
@@ -287,7 +295,9 @@ class Scheduler:
         if key[0] == "S" and key[1] > 0:
             bw = key[1]
             devs = eligible_devices(self.cluster, tier)
-            if all(d.bandwidth < bw for d in devs):
+            # an all-offline tier leaves devs empty: the class queues until
+            # the tier recovers instead of being rejected as unsatisfiable
+            if devs and all(d.bandwidth < bw for d in devs):
                 raise SchedulerError(
                     f"storageBW={bw} exceeds every device's bandwidth"
                     + (f" on tier {tier!r}" if tier is not None else ""))
@@ -443,6 +453,9 @@ class Scheduler:
             return False  # active-learning node: keep it isolated
         if id(dev) in self._learning_dev_ids:
             return False  # device under calibration (shared-tier isolation)
+        if dev.health == "offline":
+            return False  # failed device: bw=0 grants bypass can_allocate,
+            #               so the health gate must be explicit
         if w.free_io_executors <= 0:
             return False
         if bw > 0 and not dev.can_allocate(bw):
@@ -464,6 +477,8 @@ class Scheduler:
         if node is None:
             return False
         dev = self._tier_on(node, tier)
+        if dev.health == "offline":
+            return False
         # the tuner models the device it actually learns on
         tuner = self._make_tuner(key, task.storage_bw, node, tier)
         c = tuner.current_constraint()
@@ -490,7 +505,8 @@ class Scheduler:
             if w.learning_owner is not None:
                 continue
             dev = self._tier_on(w, tier)
-            if dev is None or id(dev) in self._learning_dev_ids:
+            if dev is None or id(dev) in self._learning_dev_ids \
+                    or dev.health == "offline":
                 continue
             if w.free_io_executors <= 0 or not dev.can_allocate(c):
                 continue
@@ -663,6 +679,39 @@ class Scheduler:
                 tuner.observe(task.granted_bw, task.duration)
         self.completed.append(task)
         self._dirty = True  # a resource was freed (and maybe an epoch advanced)
+
+    def on_retry(self, task: TaskInstance) -> None:
+        """Release a failed attempt's resources *without* the completion
+        bookkeeping (no ``completed`` entry, no tuner feedback — the task
+        is not done, it will be re-granted). Mirrors ``on_complete``'s
+        resource side: executors, bandwidth, and the capacity reservation
+        all return; a learning-epoch membership is un-admitted so the epoch
+        can still conclude."""
+        self.running.discard(task.tid)
+        w = task.worker
+        if task.defn.task_type == TaskType.COMPUTE:
+            w.free_cpus += task.defn.computing_units
+        else:
+            w.free_io_executors += 1
+            dev = task.device or w.storage
+            dev.release(task.granted_bw)
+            if task.reserved_mb:
+                dev.cancel_reservation(task.reserved_mb)
+        if task.epoch is not None:
+            # the attempt never completes, so its admission must not leave
+            # the epoch waiting forever on completed >= admitted
+            task.epoch.admitted -= 1
+            key = task.tuner_key or self._tuner_key(
+                task.defn.signature, task.tier)
+            tuner = self.tuners.get(key)
+            if tuner is not None and tuner.epoch is task.epoch \
+                    and tuner.learning() and task.epoch.done():
+                # the un-admit concluded the current epoch (its other
+                # members all finished): advance as a completion would have
+                tuner._advance()
+                if not tuner.learning():
+                    self._release_learning_node(key)
+        self._dirty = True
 
     def end_of_stream(self) -> None:
         """Signal that no more tasks will be submitted (final barrier):

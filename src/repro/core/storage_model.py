@@ -25,6 +25,11 @@ def aggregate_throughput(device: StorageDevice, k: int) -> float:
     if k <= 0:
         return 0.0
     ramp = min(k * device.per_stream_cap, device.bandwidth)
+    # degraded health scales what the hardware can deliver; the guard keeps
+    # healthy-path arithmetic (and golden launch logs) byte-identical
+    f = device.bw_factor
+    if f != 1.0:
+        ramp *= f
     over = max(0, k - device.congestion_knee)
     pen = device.congestion_alpha * over + device.congestion_beta * over * over
     return ramp / (1.0 + pen)

@@ -113,9 +113,13 @@ class SimSpec:
 
     duration: float = 0.0        # compute time, seconds (virtual)
     io_bytes: float = 0.0        # MB to write/read for I/O tasks
-    fail: bool = False           # fault injection: the task FAILs at its
+    fail: "bool | int" = False   # fault injection: the task FAILs at its
     #                              (normally computed) end time, exercising
-    #                              descendant cancellation in the simulator
+    #                              the retry path and, once retries are
+    #                              exhausted, descendant cancellation.
+    #                              True: every attempt fails; an int N:
+    #                              only the first N attempts fail (with
+    #                              maxRetries >= N the task succeeds)
 
 
 class TaskInstance:

@@ -1,0 +1,559 @@
+"""Tier failure domains (ISSUE 7): schedule/engine unit semantics, device
+health accounting, sim/real retry parity, reroute + re-drain + lineage
+recovery end-to-end, IO501/IOSan integration, and crash-consistent
+checkpointing (atomic manifest fsync, kill-point fuzz, restore fallback,
+fast-tier-offline reroute)."""
+import itertools
+import json
+import os
+
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import _write_manifest_atomic
+from repro.core import (Cluster, FailureEngine, FailureEvent,
+                        FailureSchedule, IORuntime, LifecycleConfig,
+                        RealBackend, SimBackend, StorageDevice, TaskState,
+                        WorkerNode, constraint, io, task)
+from repro.core.task import TaskInstance
+
+
+def _fresh_tids():
+    TaskInstance._ids = itertools.count()
+
+
+def two_tier(bb_bw=800.0, bb_cap=200.0, fs_bw=200.0, fs_cap=100.0,
+             bb_capacity_gb=None):
+    """One worker over a burst buffer + shared-FS hierarchy; the canonical
+    failure-domain topology (kill bb, survive on fs)."""
+    fs = StorageDevice(name="shared-fs", bandwidth=fs_bw,
+                       per_stream_cap=fs_cap, tier="fs")
+    bb = StorageDevice(name="w0-bb", bandwidth=bb_bw, per_stream_cap=bb_cap,
+                       tier="bb", capacity_gb=bb_capacity_gb)
+    w = WorkerNode(name="w0", cpus=4, io_executors=8, tiers=[bb, fs])
+    return Cluster(workers=[w])
+
+
+def device(cluster, tier):
+    return next(d for d in cluster.devices if d.tier == tier)
+
+
+def obj_of(cat, fut):
+    return cat._by_fut[id(fut)][1]
+
+
+# ---------------------------------------------------------- event/schedule
+def test_failure_event_validation():
+    with pytest.raises(ValueError, match="t must be >= 0"):
+        FailureEvent(-1.0, "bb", "offline")
+    with pytest.raises(ValueError, match="state must be one of"):
+        FailureEvent(1.0, "bb", "down")
+    with pytest.raises(ValueError, match=r"bw_factor must be in \(0, 1\]"):
+        FailureEvent(1.0, "bb", "degraded", 0.0)
+    with pytest.raises(ValueError, match=r"bw_factor must be in \(0, 1\]"):
+        FailureEvent(1.0, "bb", "degraded", 1.5)
+    # bw_factor is ignored (valid) for non-degraded states
+    FailureEvent(1.0, "bb", "offline", 0.0)
+
+
+def test_schedule_coerces_tuples_and_stable_sorts():
+    sched = FailureSchedule([
+        (5.0, "fs", "healthy"),
+        (1.0, "bb", "degraded", 0.5),
+        FailureEvent(5.0, "fs", "offline"),  # same t, listed second
+    ])
+    assert [e.t for e in sched] == [1.0, 5.0, 5.0]
+    assert sched.events[0].bw_factor == 0.5
+    # stable: the two t=5 events keep their given order
+    assert [e.state for e in sched.events[1:]] == ["healthy", "offline"]
+    assert len(sched) == 3
+
+
+def test_seeded_schedule_reproducible():
+    a = FailureSchedule.seeded(42, targets=("bb", "fs"), horizon=10.0)
+    b = FailureSchedule.seeded(42, targets=("bb", "fs"), horizon=10.0)
+    c = FailureSchedule.seeded(43, targets=("bb", "fs"), horizon=10.0)
+    assert a.events == b.events
+    assert a.events != c.events
+    # recover=True pairs every injection with a later healthy event
+    states = [e.state for e in a]
+    assert states.count("healthy") == 3 and len(a) == 6
+    assert all(0.0 <= e.t < 10.0 for e in a)
+    with pytest.raises(ValueError, match=">= 1 target"):
+        FailureSchedule.seeded(1, targets=(), horizon=5.0)
+
+
+def test_engine_rejects_unknown_target():
+    with pytest.raises(ValueError, match="'nvme' matches no tier"):
+        FailureEngine(FailureSchedule([(1.0, "nvme", "offline")]), two_tier())
+
+
+def test_engine_transitions_and_final_state():
+    cluster = two_tier()
+    bb = device(cluster, "bb")
+    eng = FailureEngine(FailureSchedule([
+        (1.0, "bb", "degraded", 0.5),
+        (2.0, "bb", "healthy"),
+        (3.0, "w0-bb", "offline"),  # device-name targeting
+    ]), cluster)
+    assert eng.active and eng.next_time() == 1.0
+    trans = eng.apply_due(1.0)
+    assert trans == [(bb, "healthy", "degraded")]
+    assert bb.health == "degraded" and bb.effective_bandwidth == 400.0
+    trans = eng.apply_due(10.0)
+    assert [(p, n) for _, p, n in trans] == [("degraded", "healthy"),
+                                             ("healthy", "offline")]
+    assert bb.health == "offline" and eng.next_time() == float("inf")
+    assert eng.final_state(bb) == "offline"
+    assert eng.final_state(device(cluster, "fs")) is None
+    s = eng.summary()
+    assert s["transitions"] == 3 and s["pending"] == 0
+    assert s["log"][0] == (1.0, "w0-bb", "healthy", "degraded")
+    assert not FailureEngine(FailureSchedule([]), cluster).active
+
+
+# ------------------------------------------------------ device health state
+def test_device_health_accounting():
+    d = StorageDevice(name="d", bandwidth=1000.0, per_stream_cap=200.0)
+    epoch = d.rate_epoch
+    d.set_health("degraded", 0.4)
+    assert d.effective_bandwidth == 400.0
+    assert d.rate_epoch > epoch  # cached finish times must be re-derived
+    # the lost fraction of the nameplate budget is not allocatable
+    assert d.can_allocate(400.0) and not d.can_allocate(401.0)
+    d.set_health("offline")
+    assert d.effective_bandwidth == 0.0
+    assert not d.can_allocate(1.0)
+    assert d.add_background(4, 100.0) == 0.0  # co-tenants get nothing
+    d.set_health("healthy")
+    assert d.effective_bandwidth == 1000.0 and d.can_allocate(1000.0)
+    with pytest.raises(ValueError, match="unknown health state"):
+        d.set_health("broken")
+    assert d.check_invariants() == []
+
+
+# ------------------------------------------------------- sim retry semantics
+def _run_sim_write(sim_fail, max_retries, failures=None, n_extra=0):
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=SimBackend(),
+                   failures=failures) as rt:
+        @constraint(maxRetries=max_retries)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        wr(0, io_mb=100.0, sim_fail=sim_fail)
+        for i in range(n_extra):
+            wr(1 + i, io_mb=100.0)
+        rt.barrier(final=True)
+    return rt
+
+
+def test_sim_fail_count_retries_then_succeeds():
+    rt = _run_sim_write(sim_fail=2, max_retries=3)
+    t = rt.scheduler.completed[0]
+    assert t.state == TaskState.DONE and t.retries == 2
+    # each retry is a fresh grant with its own launch-log entry
+    assert sum(1 for tid, _, _ in rt.scheduler.launch_log
+               if tid == t.tid) == 3
+
+
+def test_sim_fail_true_exhausts_retry_budget():
+    rt = _run_sim_write(sim_fail=True, max_retries=2)
+    t = next(iter(rt.graph.tasks.values()))
+    assert t.state == TaskState.FAILED
+    assert t.retries == 3  # maxRetries + 1 attempts, all failed
+
+
+def test_sim_real_retry_parity():
+    # the simulator's attempt accounting must match RealBackend's
+    # in-worker loop: N injected failures under maxRetries >= N leaves
+    # retries == N and the task DONE on both backends
+    sim_rt = _run_sim_write(sim_fail=2, max_retries=3)
+    sim_task = sim_rt.scheduler.completed[0]
+    calls = {"n": 0}
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=RealBackend()) as rt:
+        @constraint(maxRetries=3)
+        @io
+        @task()
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise IOError("transient")
+        flaky()
+        rt.barrier(final=True)
+    real_task = rt.scheduler.completed[0]
+    assert calls["n"] == 3
+    assert (sim_task.state, sim_task.retries) == \
+        (real_task.state, real_task.retries) == (TaskState.DONE, 2)
+
+
+# --------------------------------------------------- end-to-end injection
+def _write_burst(rt, n=6, io_mb=200.0, bw=50.0, max_retries=3, tier=None):
+    @constraint(storageBW=bw, maxRetries=max_retries)
+    @io
+    @task(returns=1)
+    def wr(i):
+        pass
+    return [wr(i, io_mb=io_mb, storage_tier=tier) for i in range(n)]
+
+
+def _launch_log_of(failures):
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=SimBackend(),
+                   failures=failures) as rt:
+        _write_burst(rt)
+        rt.barrier(final=True)
+    return list(rt.scheduler.launch_log), rt
+
+
+def test_empty_schedule_is_bit_identical_to_no_wiring():
+    log_plain, rt_plain = _launch_log_of(None)
+    log_empty, rt_empty = _launch_log_of(FailureSchedule([]))
+    assert log_plain == log_empty and log_plain
+    # an inert engine is dropped entirely: no summary, no attached state
+    assert rt_empty.failures is None
+    assert "failures" not in rt_empty.stats()
+
+
+def test_offline_midrun_fails_inflight_into_retry_path():
+    _fresh_tids()
+    # writes run at 50 MB/s x 200 MB = 4 s each; bb dies at t=1 with every
+    # first-wave write in flight there
+    with IORuntime(two_tier(), backend=SimBackend(),
+                   failures=FailureSchedule([(1.0, "bb", "offline")])) as rt:
+        _write_burst(rt)
+        rt.barrier(final=True)
+    done = rt.scheduler.completed
+    assert all(t.state == TaskState.DONE for t in done)
+    retried = [t for t in done if t.retries > 0]
+    assert retried, "the failure must hit in-flight work"
+    # nothing finishes on (or is granted to) the dead device afterwards
+    for t in done:
+        if t.device is not None and t.device.tier == "bb":
+            assert t.start_time <= 1.0 + 1e-9
+        if t.retries:
+            assert t.device.tier == "fs"
+    assert rt.stats()["failures"]["transitions"] == 1
+
+
+def test_pinned_tier_rerouted_when_tier_dies():
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=SimBackend(),
+                   failures=FailureSchedule([(0.5, "bb", "offline")])) as rt:
+        futs = _write_burst(rt, n=2, max_retries=2, tier="bb")
+        rt.barrier(final=True)
+        del futs
+    done = rt.scheduler.completed
+    assert all(t.state == TaskState.DONE for t in done)
+    # the pin is dropped at retry — there is no healthy bb device left
+    assert {t.device.tier for t in done if t.retries} == {"fs"}
+
+
+def test_pinned_tier_write_waits_out_recovery():
+    _fresh_tids()
+    # bb is down from t=0 and recovers at t=5: the pinned write (no retry
+    # budget) must queue — not fail — and land on bb once it heals
+    sched = FailureSchedule([(0.0, "bb", "offline"), (5.0, "bb", "healthy")])
+    with IORuntime(two_tier(), backend=SimBackend(), failures=sched) as rt:
+        @constraint(maxRetries=0)
+        @io
+        @task(returns=1)
+        def wr():
+            pass
+        wr(io_mb=100.0, storage_tier="bb")
+        rt.barrier(final=True)
+    t = rt.scheduler.completed[0]
+    assert t.state == TaskState.DONE and t.retries == 0
+    assert t.device.tier == "bb" and t.start_time >= 5.0
+
+
+def test_degraded_tier_slows_io_without_failing_it():
+    _, rt_healthy = _launch_log_of(None)
+    log, rt_deg = _launch_log_of(
+        FailureSchedule([(0.0, "bb", "degraded", 0.25)]))
+    assert all(t.state == TaskState.DONE
+               for t in rt_deg.scheduler.completed)
+    assert all(t.retries == 0 for t in rt_deg.scheduler.completed)
+    assert rt_deg.stats()["makespan"] > rt_healthy.stats()["makespan"]
+
+
+def test_offline_without_retry_budget_fails_task():
+    _fresh_tids()
+    with IORuntime(two_tier(), backend=SimBackend(),
+                   failures=FailureSchedule([(0.5, "bb", "offline")])) as rt:
+        @constraint(storageBW=50.0, maxRetries=0)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+
+        @task(returns=1)
+        def consume(x):
+            pass
+        futs = [wr(i, io_mb=200.0, storage_tier="bb") for i in range(2)]
+        deps = [consume(f) for f in futs]
+        rt.barrier(final=True)
+        del futs, deps
+    by_name = {}
+    for t in rt.graph.tasks.values():
+        by_name.setdefault(t.defn.name, []).append(t)
+    assert all(t.state == TaskState.FAILED for t in by_name["wr"])
+    # data-descendants of the dead writes are cancelled, not left stuck
+    assert all(t.state == TaskState.FAILED for t in by_name["consume"])
+    assert rt.graph.unfinished == 0
+
+
+# ----------------------------------------------- catalog recovery ladder
+def _sentinel(rt, duration):
+    @task(returns=1)
+    def keep_alive():
+        pass
+    return keep_alive(duration=duration)
+
+
+def test_offline_drops_residency_and_reruns_lineage():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, auto_prefetch=False)
+    sched = FailureSchedule([(3.0, "bb", "offline")])
+    with IORuntime(two_tier(), backend=SimBackend(), lifecycle=cfg,
+                   failures=sched) as rt:
+        @constraint(maxRetries=2)
+        @io
+        @task(returns=1)
+        def wr(i):
+            pass
+        futs = [wr(i, io_mb=64.0, storage_tier="bb") for i in range(2)]
+        _sentinel(rt, duration=8.0)  # keep the sim alive past t=3
+        rt.barrier(final=True)
+        cat = rt.catalog
+        objs = [obj_of(cat, f) for f in futs]
+    bb = device(rt.cluster, "bb")
+    # every residency on the dead device was dropped at the transition...
+    assert not cat._resident.get(id(bb))
+    # ...and lineage re-runs reproduced each orphan on a healthy device
+    assert cat.lost_objects == []
+    for obj in objs:
+        assert obj.residency, f"{obj.name} not recovered"
+        assert all(d.health != "offline" for d in obj.residency.values())
+        assert not obj.recovering
+    recov = [t for t in rt.scheduler.completed
+             if t.defn.name == "lineage_recover"]
+    assert len(recov) == 2
+    assert rt.stats()["lifecycle"]["n_lost_objects"] == 0
+
+
+def test_redrain_restores_durable_copy_after_fs_outage():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, auto_prefetch=False)
+    # the durable FS dies at t=3 and heals at t=6; the shard's fast-tier
+    # copy survives, so recovery is an emergency re-drain, not a re-run
+    sched = FailureSchedule([(3.0, "fs", "offline"), (6.0, "fs", "healthy")])
+    with IORuntime(two_tier(), backend=SimBackend(), lifecycle=cfg,
+                   failures=sched) as rt:
+        @constraint(maxRetries=2)
+        @io
+        @task(returns=1)
+        def wr():
+            pass
+        fut = wr(io_mb=64.0, storage_tier="bb")
+        rt.drain(fut, "fs", io_mb=64.0)  # durable copy, alongside bb's
+        _sentinel(rt, duration=10.0)
+        rt.barrier(final=True)
+        cat = rt.catalog
+        obj = obj_of(cat, fut)
+    assert cat.lost_objects == []
+    assert set(obj.residency) >= {"bb", "fs"}, obj.residency
+    assert all(d.health == "healthy" for d in obj.residency.values())
+    # no lineage re-run happened: the surviving copy fed the re-drain
+    assert not any(t.defn.name == "lineage_recover"
+                   for t in rt.scheduler.completed)
+
+
+def test_external_object_with_no_lineage_is_lost():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, auto_prefetch=False,
+                          durable_tier="fs")
+    sched = FailureSchedule([(2.0, "bb", "offline")])
+    with IORuntime(two_tier(), backend=SimBackend(), lifecycle=cfg,
+                   failures=sched) as rt:
+        ext = rt.external_data("inputs.h5", 128.0, "bb")
+        _sentinel(rt, duration=5.0)
+        rt.barrier(final=True)
+        cat = rt.catalog
+        obj = obj_of(cat, ext)
+    # no producer recorded -> unrecoverable, and reported as such
+    assert obj in cat.lost_objects and not obj.residency
+    assert rt.stats()["lifecycle"]["n_lost_objects"] == 1
+
+
+def test_discarded_ephemeral_dropped_without_recovery():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, auto_prefetch=False)
+    sched = FailureSchedule([(3.0, "bb", "offline")])
+    with IORuntime(two_tier(), backend=SimBackend(), lifecycle=cfg,
+                   failures=sched) as rt:
+        @io
+        @task(returns=1)
+        def wr():
+            pass
+        fut = wr(io_mb=64.0, storage_tier="bb")
+        rt.discard(fut)  # never read again: losing it is not a loss
+        _sentinel(rt, duration=6.0)
+        rt.barrier(final=True)
+        cat = rt.catalog
+    assert cat.lost_objects == []
+    assert not any(t.defn.name == "lineage_recover"
+                   for t in rt.graph.tasks.values())
+
+
+def test_sanitizer_on_failure_run_is_clean_and_identical():
+    def run(sanitize):
+        _fresh_tids()
+        cfg = LifecycleConfig(enabled=True, auto_prefetch=False)
+        sched = FailureSchedule([(1.0, "bb", "offline")])
+        with IORuntime(two_tier(), backend=SimBackend(sanitize=sanitize),
+                       lifecycle=cfg, failures=sched) as rt:
+            _write_burst(rt, n=4)
+            _sentinel(rt, duration=6.0)
+            rt.barrier(final=True)
+        return list(rt.scheduler.launch_log)
+    # IOSan's offline-residency invariant holds through the transition,
+    # and a sanitizer-on run stays bit-identical to sanitizer-off
+    assert run(True) == run(False)
+
+
+# ------------------------------------------------------------- lint IO501
+def test_io501_flags_schedule_that_kills_durable_tier_forever():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, durable_tier="fs")
+    with IORuntime(two_tier(), backend="capture", lifecycle=cfg,
+                   failures=FailureSchedule([(1.0, "fs", "offline")])) as rt:
+        pass
+    diags = [d for d in rt.lint() if d.code == "IO501"]
+    assert len(diags) == 1
+    assert "durable tier" in diags[0].message
+
+
+def test_io501_quiet_when_durable_tier_recovers():
+    _fresh_tids()
+    cfg = LifecycleConfig(enabled=True, durable_tier="fs")
+    sched = FailureSchedule([(1.0, "fs", "offline"), (4.0, "fs", "healthy")])
+    with IORuntime(two_tier(), backend="capture", lifecycle=cfg,
+                   failures=sched) as rt:
+        pass
+    assert not [d for d in rt.lint() if d.code == "IO501"]
+
+
+# ----------------------------------------- checkpoint crash consistency
+def _np_tree():
+    import numpy as np
+    return {"w": np.arange(8, dtype=np.float32).reshape(2, 4),
+            "b": np.ones((3,), np.float32)}
+
+
+def _tree_equal(a, b):
+    import numpy as np
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+def test_manifest_commit_fsyncs_file_and_directory(tmp_path, monkeypatch):
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: (synced.append(fd),
+                                                 real_fsync(fd))[1])
+    path = tmp_path / "MANIFEST.json"
+    _write_manifest_atomic(path, {"step": 1, "shards": []})
+    # one fsync for the manifest bytes, one for the directory entry —
+    # without both, "manifest-last" is not crash-consistent
+    assert len(synced) == 2
+    assert json.loads(path.read_text())["step"] == 1
+    assert not (tmp_path / "MANIFEST.json.tmp").exists()
+
+
+def test_restore_falls_back_when_newest_step_is_torn(tmp_path):
+    mgr = CheckpointManager(tmp_path, n_shards=2)
+    t = _np_tree()
+    mgr.save(1, t, sync=True)
+    mgr.save(2, t, sync=True)
+    # fast-tier loss after a partial drain: one shard of step 2 vanishes
+    gone = next((tmp_path / "step_00000002").glob("shard_*.bin"))
+    gone.unlink()
+    with pytest.warns(RuntimeWarning, match="falling back to older"):
+        restored, step = mgr.restore(t)
+    assert step == 1 and _tree_equal(t, restored)
+    # an explicitly requested torn step still raises — no silent swap
+    with pytest.raises(IOError, match="missing|truncated|No such file"):
+        mgr.restore(t, step=2)
+
+
+def test_restore_falls_back_on_truncated_shard(tmp_path):
+    mgr = CheckpointManager(tmp_path, n_shards=1)
+    t = _np_tree()
+    mgr.save(1, t, sync=True)
+    mgr.save(2, t, sync=True)
+    shard = next((tmp_path / "step_00000002").glob("shard_*.bin"))
+    shard.write_bytes(shard.read_bytes()[:-4])
+    with pytest.warns(RuntimeWarning, match="torn"):
+        restored, step = mgr.restore(t)
+    assert step == 1 and _tree_equal(t, restored)
+
+
+@pytest.mark.parametrize("kill_point,expect_step,expect_warn", [
+    ("before_shards", 3, False),   # step dir created, nothing written
+    ("before_manifest", 3, False),  # shards durable, manifest never began
+    ("manifest_tmp", 3, False),    # crashed between tmp write and rename
+    ("manifest_torn", 3, False),   # garbage manifest bytes
+    ("after_manifest_shard_lost", 3, True),  # committed, then shard died
+    ("committed", 4, False),       # clean commit
+])
+def test_restore_kill_point_fuzz(tmp_path, kill_point, expect_step,
+                                 expect_warn):
+    # every torn on-disk state a crash mid-save can leave behind must
+    # restore to the newest *durable* step — never an error, never a
+    # half-written tree
+    mgr = CheckpointManager(tmp_path, n_shards=2, keep=10)
+    t = _np_tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t, sync=True)
+    d = tmp_path / "step_00000004"
+    if kill_point == "before_shards":
+        for p in d.iterdir():
+            p.unlink()
+    elif kill_point == "before_manifest":
+        (d / "MANIFEST.json").unlink()
+    elif kill_point == "manifest_tmp":
+        (d / "MANIFEST.json").rename(d / "MANIFEST.json.tmp")
+    elif kill_point == "manifest_torn":
+        (d / "MANIFEST.json").write_text('{"step": 4, "shards":')
+    elif kill_point == "after_manifest_shard_lost":
+        next(d.glob("shard_*.bin")).unlink()
+    if expect_warn:
+        with pytest.warns(RuntimeWarning):
+            restored, step = mgr.restore(t)
+    else:
+        restored, step = mgr.restore(t)
+    assert step == expect_step and _tree_equal(t, restored)
+
+
+def test_save_reroutes_to_shared_fs_when_fast_tier_offline(tmp_path):
+    fs = StorageDevice(name="fs", bandwidth=2000, per_stream_cap=500,
+                       tier="fs")
+    bb = StorageDevice(name="bb", bandwidth=4000, per_stream_cap=1000,
+                       tier="bb")
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2, io_executors=4,
+                                          tiers=[bb, fs])])
+    fast = tmp_path / "fast"
+    mgr = CheckpointManager(tmp_path / "ckpt", n_shards=2, fast_dir=fast)
+    t = _np_tree()
+    bb.set_health("offline")
+    with IORuntime(cluster, backend=RealBackend()):
+        assert mgr.save(3, t)
+        mgr.wait()
+    # the burst skipped the dead fast tier entirely: shards landed
+    # directly in the durable directory, nothing staged under fast_dir
+    assert not list(fast.glob("step_*/shard_*.bin"))
+    restored, step = mgr.restore(t)
+    assert step == 3 and _tree_equal(t, restored)

@@ -468,6 +468,113 @@ def test_interference_same_seed_same_trace_deterministic(recipe, seed):
     assert log1 == log2
 
 
+# --------------------------------------------- failure-domain invariants
+from repro.core import FailureSchedule  # noqa: E402
+
+
+def _failure_schedule(seed=2):
+    """Seeded fault injection against the fast tiers only — the durable fs
+    is never targeted, so drains and recoveries always have a home — and
+    ``recover=True`` brings every tier back before the horizon, so pinned
+    work queues for the recovery instead of wedging the run. Seed 2 makes
+    the deterministic recipes hit the whole ladder: offline-induced
+    retries, residency drops, and lineage re-runs."""
+    return FailureSchedule.seeded(seed, targets=("ssd", "bb"), horizon=6.0)
+
+
+def run_recipe_failed(recipe, make=make_cluster, seed=2):
+    """run_recipe with seeded device/tier faults injected."""
+    return run_recipe(recipe, make=make,
+                      rt_kwargs={"failures": _failure_schedule(seed)})
+
+
+def assert_failure_invariants(rt, cluster):
+    """Universal invariants under fault injection: everything drains (DONE
+    or FAILED, never stuck — device death is not a hang), accounting
+    returns to the budget, no residency survives on an offline device, and
+    every surviving residency points at a healthy copy."""
+    tasks = sorted(rt.graph.tasks.values(), key=lambda t: t.tid)
+    assert rt.graph.unfinished == 0
+    for t in tasks:
+        assert t.state in (TaskState.DONE, TaskState.FAILED), t
+    for d in cluster.devices:
+        assert d.active_io == 0, d.name
+        assert abs(d.available_bw - d.bandwidth) < 1e-6, \
+            (d.name, d.available_bw)
+        assert abs(d.reserved_mb) < 1e-6, d.name
+        if d.capacity_mb is not None:
+            assert d.peak_occupancy_mb <= d.capacity_mb + 1e-6, d.name
+    cat = rt.catalog
+    if cat.enabled:
+        for d in cluster.devices:
+            resident = cat._resident.get(id(d), set())
+            if d.health == "offline":
+                assert not resident, \
+                    f"{d.name} offline but still lists residents"
+            if d.capacity_mb is not None:
+                assert abs(d.used_mb - sum(o.size_mb for o in resident)) \
+                    < 1e-6, d.name
+        for obj in cat.objects.values():
+            for dev in obj.residency.values():
+                assert dev.health != "offline", obj.name
+
+
+@pytest.mark.parametrize("recipe_idx", range(len(DET_RECIPES)))
+def test_failure_invariants_deterministic(recipe_idx):
+    recipe = normalize(DET_RECIPES[recipe_idx])
+    rt, cluster, _ = run_recipe_failed(recipe)
+    assert_failure_invariants(rt, cluster)
+
+
+@pytest.mark.parametrize("recipe_idx", range(len(DET_RECIPES)))
+def test_failure_capacity_invariants_deterministic(recipe_idx):
+    """Faults on a finite-capacity hierarchy: the capacity suite (reserve/
+    commit, residency/occupancy agreement) holds through device death and
+    the recovery ladder (re-drains + lineage re-runs)."""
+    recipe = normalize(DET_RECIPES[recipe_idx])
+    rt, cluster, _ = run_recipe_failed(recipe, make=make_capacity_cluster)
+    assert_failure_invariants(rt, cluster)
+
+
+def test_failure_same_seed_bit_identical_fallback():
+    recipe = normalize(DET_RECIPES[2])
+    log1 = run_recipe_failed(recipe)[0].scheduler.launch_log
+    log2 = run_recipe_failed(recipe)[0].scheduler.launch_log
+    assert log1 == log2 and log1
+
+
+def test_zero_failure_config_is_golden_fallback():
+    """An empty FailureSchedule never attaches an engine: the launch log is
+    bit-identical to a run with no failure wiring at all."""
+    recipe = normalize(DET_RECIPES[0])
+    plain = run_recipe(recipe)[0].scheduler.launch_log
+    empty = run_recipe(recipe, rt_kwargs={
+        "failures": FailureSchedule([])})[0].scheduler.launch_log
+    assert empty == plain
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(NODE, min_size=1, max_size=24),
+       st.integers(0, 1000))
+def test_failure_invariants_random_dags(recipe, seed):
+    """Universal failure invariants over random tiered DAGs with random
+    fault schedules (and the recipes' own injected task faults)."""
+    recipe = normalize(recipe)
+    rt, cluster, _ = run_recipe_failed(recipe, make=make_capacity_cluster,
+                                       seed=seed)
+    assert_failure_invariants(rt, cluster)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(NODE, min_size=2, max_size=16), st.integers(0, 1000))
+def test_failure_same_seed_same_trace_deterministic(recipe, seed):
+    """Same DAG + same fault seed => bit-identical launch logs."""
+    recipe = normalize(recipe)
+    log1 = run_recipe_failed(recipe, seed=seed)[0].scheduler.launch_log
+    log2 = run_recipe_failed(recipe, seed=seed)[0].scheduler.launch_log
+    assert log1 == log2
+
+
 def test_hypothesis_mode_reported():
     """Self-describing: record which mode the module ran in (the shim skips
     the @given properties without hypothesis; fallbacks always run)."""
