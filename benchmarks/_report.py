@@ -1,0 +1,54 @@
+"""Shared BENCH_*.json writer: one envelope for every benchmark.
+
+Each benchmark used to hand-roll its result dictionary, so the JSONs had
+nothing in common beyond being JSON. ``write_report`` keeps every
+benchmark's existing **headline keys at the top level** (dashboards and
+the CI asserts read those) and adds a uniform ``"_envelope"`` block::
+
+    {
+      "bursty": {...},                  # headline keys, unchanged
+      "_envelope": {
+        "schema": 1,
+        "bench": "interference",
+        "seed": 1234,                   # or null
+        "config": {...},                # the knobs the run used
+        "wait_states": {...}            # obs attribution rollup (or null)
+      }
+    }
+
+``wait_states`` is the :meth:`repro.obs.TraceRecorder.wait_state_summary`
+rollup when the benchmark ran traced (see docs/observability.md), else
+None — presence of the key is uniform so consumers need no schema probe.
+"""
+from __future__ import annotations
+
+import json
+
+SCHEMA_VERSION = 1
+
+
+def make_report(headline: dict, *, bench: str, seed=None, config=None,
+                wait_states=None) -> dict:
+    """Headline keys stay top-level; the envelope rides under
+    ``"_envelope"`` (underscore-prefixed so it sorts apart and can never
+    collide with a real metric name)."""
+    if "_envelope" in headline:
+        raise ValueError("headline dict already carries an _envelope key")
+    out = dict(headline)
+    out["_envelope"] = {
+        "schema": SCHEMA_VERSION,
+        "bench": bench,
+        "seed": seed,
+        "config": config or {},
+        "wait_states": wait_states,
+    }
+    return out
+
+
+def write_report(path: str, headline: dict, *, bench: str, seed=None,
+                 config=None, wait_states=None) -> dict:
+    report = make_report(headline, bench=bench, seed=seed, config=config,
+                         wait_states=wait_states)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report

@@ -34,12 +34,13 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import time
 
 from repro.core import (Cluster, IORuntime, LifecycleConfig, SimBackend,
                         StorageDevice, WorkerNode, constraint, io, task)
 from repro.core.task import TaskInstance
+
+from ._report import write_report
 
 # NVMe-class SSD over a congested parallel FS (the bench's own calibration;
 # the paper's fsync-bound numbers live in the figure benchmarks)
@@ -231,8 +232,8 @@ def main(argv=None) -> dict:
     assert pf["overlap_at_least_half"], \
         f"auto-prefetch must hide >= 50% of read time " \
         f"(got {pf['read_overlap_frac']:.0%})"
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    report = write_report(args.out, report, bench="capacity",
+                          config={"steps": args.steps})
     print(f"wrote {args.out}")
     return report
 

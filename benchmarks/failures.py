@@ -34,10 +34,13 @@ import itertools
 import json
 import time
 
-from repro.core import (Cluster, FailureSchedule, IORuntime, LifecycleConfig,
-                        SimBackend, StorageDevice, WorkerNode, constraint,
-                        io, task)
+from repro.core import (BurstyTraffic, Cluster, FailureSchedule, IORuntime,
+                        LifecycleConfig, SimBackend, StorageDevice,
+                        WorkerNode, constraint, io, task)
 from repro.core.task import TaskInstance
+from repro.obs import perfetto
+
+from ._report import write_report
 
 BB_BW, BB_CAP = 1200.0, 300.0
 FS_BW, FS_CAP = 300.0, 50.0
@@ -67,7 +70,7 @@ def make_cluster(with_bb: bool = True, bb_capacity_gb: float = 1.0
 def run_variant(n_steps: int = 10, n_shards: int = 3,
                 shard_mb: float = 128.0, step_s: float = 1.5,
                 shard_bw: float = 150.0, with_bb: bool = True,
-                failures=None) -> dict:
+                failures=None, interference=None, trace=False) -> dict:
     """The step chain: compute, then a burst of snapshot shards onto the
     fastest tier; the next step gates on the previous burst so shards stay
     reader-protected until absorbed, after which eviction drains them to
@@ -77,7 +80,8 @@ def run_variant(n_steps: int = 10, n_shards: int = 3,
     cfg = LifecycleConfig(auto_prefetch=False)
     t0 = time.perf_counter()
     with IORuntime(cluster, backend=SimBackend(), lifecycle=cfg,
-                   failures=failures) as rt:
+                   failures=failures, interference=interference,
+                   trace=trace) as rt:
         @task(returns=1)
         def step(prev, gate, i):
             pass
@@ -122,15 +126,15 @@ def run_variant(n_steps: int = 10, n_shards: int = 3,
         "health_transitions": transitions,
         "shard_windows": shard_windows,
     }
-    return out, launch_log
+    return out, launch_log, rt.trace()
 
 
 def compare(n_steps: int = 10, **kw) -> dict:
     # healthy reference: where the failure time lands relative to a clean
     # run, and the launch log the empty-schedule parity check pins
-    healthy, log_plain = run_variant(n_steps=n_steps, **kw)
-    _, log_empty = run_variant(n_steps=n_steps,
-                               failures=FailureSchedule([]), **kw)
+    healthy, log_plain, _ = run_variant(n_steps=n_steps, **kw)
+    _, log_empty, _ = run_variant(n_steps=n_steps,
+                                  failures=FailureSchedule([]), **kw)
     parity = log_plain == log_empty
 
     # fail mid-burst: the midpoint of a shard write ~40% into the healthy
@@ -140,11 +144,11 @@ def compare(n_steps: int = 10, **kw) -> dict:
     lo, hi = windows[int(0.4 * len(windows))]
     t_fail = round((lo + hi) / 2, 3)
     schedule = FailureSchedule([(t_fail, "bb", "offline")])
-    reroute, _ = run_variant(n_steps=n_steps, failures=schedule, **kw)
+    reroute, _, _ = run_variant(n_steps=n_steps, failures=schedule, **kw)
 
     # abort-and-restart: the job dies at t_fail and reruns from scratch on
     # the surviving FS-only topology
-    rerun, _ = run_variant(n_steps=n_steps, with_bb=False, **kw)
+    rerun, _, _ = run_variant(n_steps=n_steps, with_bb=False, **kw)
     abort_makespan = t_fail + rerun["makespan"]
 
     report = {
@@ -172,10 +176,36 @@ def compare(n_steps: int = 10, **kw) -> dict:
     return report
 
 
+def export_perfetto(path: str, n_steps: int, t_fail: float) -> dict:
+    """Rerun the reroute scenario *traced*, plus a modest bursty co-tenant
+    on the burst buffer (the bench proper has no background traffic, and a
+    trace without burst tracks would be a poor demo), and export Chrome
+    trace-event JSON loadable at https://ui.perfetto.dev — the trace shows
+    the co-tenant burst spans, the bb health transition at ``t_fail``, the
+    lost-residency evictions, and the post-failure drains to the FS."""
+    schedule = FailureSchedule([(t_fail, "bb", "offline")])
+    cotenant = [("bb", BurstyTraffic(seed=7, on_mean=3.0, off_mean=2.0,
+                                     streams=40, bw=400.0))]
+    out, _, rec = run_variant(n_steps=n_steps, failures=schedule,
+                              interference=cotenant, trace=True)
+    blob = perfetto.dumps(rec)
+    with open(path, "w") as f:
+        f.write(blob)
+    return {
+        "path": path,
+        "n_trace_events": len(json.loads(blob)["traceEvents"]),
+        "wait_states": rec.wait_state_summary(),
+        "makespan": out["makespan"],
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--out", default="BENCH_failures.json")
+    ap.add_argument("--perfetto", metavar="OUT.json", default=None,
+                    help="also rerun the reroute scenario traced (with a "
+                         "bursty co-tenant) and export a Perfetto trace")
     args = ap.parse_args(argv)
     report = compare(n_steps=args.steps)
     print("burst-buffer failure mid-drain "
@@ -190,8 +220,17 @@ def main(argv=None) -> dict:
           f"{report['speedup_vs_abort_restart']:.2f}x; "
           f"empty-schedule launch log identical: "
           f"{report['empty_schedule_launch_log_identical']}")
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    wait_states = None
+    if args.perfetto:
+        exported = export_perfetto(args.perfetto, n_steps=args.steps,
+                                   t_fail=report["t_fail"])
+        wait_states = exported.pop("wait_states")
+        report["perfetto"] = exported
+        print(f"perfetto trace written: {exported['path']} "
+              f"({exported['n_trace_events']} events)")
+    report = write_report(args.out, report, bench="failures",
+                          config={"steps": args.steps},
+                          wait_states=wait_states)
     print(f"wrote {args.out}")
     return report
 

@@ -37,13 +37,14 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import time
 
 from repro.core import (BurstyTraffic, Cluster, DriftConfig, IORuntime,
                         LifecycleConfig, SimBackend, StorageDevice,
                         WorkerNode, constraint, io, task)
 from repro.core.task import TaskInstance
+
+from ._report import write_report
 
 # a DataWarp-like shared burst buffer over a congested parallel FS; the bb
 # is nominally ~2.7x faster, so the nameplate walk always picks it
@@ -78,7 +79,8 @@ def cotenant_trace(seed: int, capacity_mb: float = 0.0):
 def run_variant(adaptive: bool, n_steps: int, seed: int,
                 step_s: float = 0.5, ckpt_mb: float = 80.0,
                 shards: int = 6, bb_capacity_gb=None,
-                capacity_mb: float = 0.0, interference=True) -> dict:
+                capacity_mb: float = 0.0, interference=True,
+                trace=False) -> dict:
     _reset_ids()
     cluster = shared_two_tier(bb_capacity_gb=bb_capacity_gb)
     kwargs = {}
@@ -94,7 +96,8 @@ def run_variant(adaptive: bool, n_steps: int, seed: int,
     if bb_capacity_gb is not None:
         kwargs["lifecycle"] = LifecycleConfig(auto_prefetch=False)
     t0 = time.perf_counter()
-    with IORuntime(cluster, backend=SimBackend(), **kwargs) as rt:
+    with IORuntime(cluster, backend=SimBackend(), trace=trace,
+                   **kwargs) as rt:
         @task(returns=1)
         def step(prev, i):
             pass
@@ -113,6 +116,7 @@ def run_variant(adaptive: bool, n_steps: int, seed: int,
         rt.barrier(final=True)
         stats = rt.stats()
         launch_log = list(rt.scheduler.launch_log)
+        waits = stats.get("wait_states")
     by_tier = {}
     for d in cluster.devices:
         by_tier[d.tier] = by_tier.get(d.tier, 0.0) + d.bytes_written
@@ -128,13 +132,19 @@ def run_variant(adaptive: bool, n_steps: int, seed: int,
         "tuner_keys": sorted(tuners),
         "n_evictions": lc.get("n_evictions", 0),
         "wall_seconds": time.perf_counter() - t0,
+        "wait_states": waits,  # None unless trace=True
         "_launch_log": launch_log,  # stripped before JSON
     }
 
 
 def compare_bursty(n_steps: int, seed: int) -> dict:
-    base = run_variant(False, n_steps, seed)
-    adapt = run_variant(True, n_steps, seed)
+    """Both variants run *traced* (tracing is pure reads — see the parity
+    section and tests/test_obs.py — so the speedup comparison is
+    unperturbed) and carry their wait-state attribution: isolation's
+    latency should pool in ``bandwidth`` waits on the contended burst
+    buffer, adaptive's should not."""
+    base = run_variant(False, n_steps, seed, trace=True)
+    adapt = run_variant(True, n_steps, seed, trace=True)
     speedup = base["makespan"] / adapt["makespan"]
     return {
         "seed": seed,
@@ -183,7 +193,6 @@ def main(argv=None) -> dict:
     bursty = compare_bursty(args.steps, args.seed)
     capacity = compare_capacity(max(10, args.steps // 2), args.seed)
     parity = parity_check(min(20, args.steps))
-    report = {"bursty": bursty, "capacity": capacity, "parity": parity}
     b = bursty
     print("bursty co-tenant on the shared burst buffer:")
     print(f"  isolation: makespan {b['isolation']['makespan']:8.2f}s  "
@@ -202,12 +211,26 @@ def main(argv=None) -> dict:
     print(f"zero-interference parity: launch log identical = "
           f"{parity['identical_launch_log']} "
           f"({parity['n_launches']} launches)")
+    for name in ("isolation", "adaptive"):
+        ws = b[name]["wait_states"]
+        print(f"wait-state attribution ({name}): "
+              f"min task coverage {ws['min_task_coverage']:.4f}, "
+              f"residual {ws['residual']:.3f}s of "
+              f"{ws['total_latency']:.1f}s total")
+        # acceptance bar: attribution accounts for >= 95% of *every*
+        # task's end-to-end latency, residual reported above
+        assert ws["min_task_coverage"] >= 0.95, \
+            f"{name}: wait attribution covers only " \
+            f"{ws['min_task_coverage']:.3f} of some task's latency"
     assert b["adaptive_wins_1_2x"], \
         f"adaptive must beat isolation by >= 1.2x (got {b['speedup']:.2f}x)"
     assert parity["identical_launch_log"] and parity["identical_makespan"], \
         "disabled traffic models must be bit-identical to no engine"
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    report = write_report(
+        args.out, {"bursty": bursty, "capacity": capacity, "parity": parity},
+        bench="interference", seed=args.seed,
+        config={"steps": args.steps},
+        wait_states=b["adaptive"]["wait_states"])
     print(f"wrote {args.out}")
     return report
 

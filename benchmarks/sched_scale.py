@@ -24,13 +24,13 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import time
 
 from repro.core import Cluster, IORuntime, SimBackend, constraint, io, task
 from repro.core.scheduler import Scheduler
 from repro.core.task import TaskInstance
 
+from ._report import write_report
 from ._seed_impl import SeedScheduler, SeedSimBackend
 
 GOLDEN_N = 1_000
@@ -48,9 +48,12 @@ def _make_cluster() -> Cluster:
     return Cluster.make(n_workers=4, cpus=8, io_executors=32)
 
 
-def run_workload(n_tasks: int, scheduler_cls=Scheduler, backend=None):
+def run_workload(n_tasks: int, scheduler_cls=Scheduler, backend=None,
+                 trace=False):
     """Mixed compute/I/O workload: compute stages feeding static- and
-    auto-constrained checkpoints (deterministic durations/sizes)."""
+    auto-constrained checkpoints (deterministic durations/sizes).
+    ``trace=True`` wires an obs TraceRecorder (the determinism tests use
+    this to pin that tracing never perturbs the launch log)."""
     _reset_ids()
     cluster = _make_cluster()
     backend = backend or SimBackend()
@@ -73,7 +76,7 @@ def run_workload(n_tasks: int, scheduler_cls=Scheduler, backend=None):
 
     t0 = time.perf_counter()
     with IORuntime(cluster, backend=backend,
-                   scheduler_cls=scheduler_cls) as rt:
+                   scheduler_cls=scheduler_cls, trace=trace) as rt:
         for i in range(n_tasks // 2):
             r = stage(i, duration=1.0 + (i % 7) * 0.25)
             if i % 3 == 2:
@@ -168,9 +171,9 @@ def main(argv=None) -> dict:
           f"seed {scale['seed_seconds']:.2f}s"
           f"{' (timed out)' if scale['seed_timed_out'] else ''} "
           f"-> speedup {tag} {scale['speedup']:.1f}x")
-    report = {"golden": golden, "scale": scale}
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    report = write_report(
+        args.out, {"golden": golden, "scale": scale}, bench="sched_scale",
+        config={"n": args.n, "golden_n": args.golden_n})
     print(f"wrote {args.out}")
     return report
 

@@ -26,11 +26,12 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import time
 
 from repro.core import Cluster, IORuntime, SimBackend, constraint, io, task
 from repro.core.task import TaskInstance
+
+from ._report import write_report
 
 # NVMe-class SSD over a DataWarp-like burst buffer over a congested
 # parallel FS: the bench's own calibration (the paper's fsync-bound SSD
@@ -139,8 +140,8 @@ def main(argv=None) -> dict:
     print(f"speedup {report['speedup']:.2f}x "
           f"({report['fs_mb_durable']:.0f} MB durable on FS in both)")
     assert report["tiered_wins"], "tiered run must beat the baseline"
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
+    report = write_report(args.out, report, bench="tiered",
+                          config={"steps": args.steps})
     print(f"wrote {args.out}")
     return report
 

@@ -146,6 +146,7 @@ class CheckpointManager:
         plan = plan_shards(host_leaves, self.n_shards)
         t0 = time.monotonic()
         if rt is None or sync:
+            mode = "sync"
             frags = [write_shard(step_dir / f"shard_{i:04d}.bin", entries)
                      for i, entries in enumerate(plan) if entries]
             manifest = {"step": step, "shards": frags, "version": 1,
@@ -155,6 +156,7 @@ class CheckpointManager:
             # flat mode — also the failure-domain reroute: with the fast
             # tier dead, shards write straight to the durable directory
             # (fs-hinted so the scheduler charges the shared FS device)
+            mode = "reroute" if self.fast_dir is not None else "flat"
             fs_hint = "fs" if self.fast_dir is not None \
                 and rt.cluster.has_tier("fs") else None
             futs = [_write_shard_task(str(step_dir / f"shard_{i:04d}.bin"),
@@ -168,6 +170,7 @@ class CheckpointManager:
             # burst-buffer mode: absorb the write burst on the fast tier,
             # drain to the shared FS asynchronously, commit manifest-last on
             # the shared FS once every shard has landed there
+            mode = "burst-buffer"
             fast_step = self.fast_dir / f"step_{step:08d}"
             fast_step.mkdir(parents=True, exist_ok=True)
             fs_hint = "fs" if rt.cluster.has_tier("fs") else None
@@ -186,14 +189,22 @@ class CheckpointManager:
             commit = _commit_task(step_dir / "MANIFEST.json", step,
                                   drained, t0)
             self._in_flight = (step, commit)
+        rec = getattr(rt, "recorder", None)
+        if rec is not None:
+            rec.on_ckpt("save", step, mode,
+                        sum(1 for entries in plan if entries))
         self._gc()
         return True
 
     def wait(self):
         rt = current_runtime()
         if self._in_flight is not None and rt is not None:
+            step = self._in_flight[0]
             rt.wait_on(self._in_flight[1])
             self._in_flight = None
+            rec = getattr(rt, "recorder", None)
+            if rec is not None:
+                rec.on_ckpt("wait", step, "async", 0)
             # the last save just became durable: one final fast-tier trim
             self._gc()
 
@@ -270,6 +281,11 @@ class CheckpointManager:
         step = chosen
         step_dir = self.dir / f"step_{step:08d}"
         manifest = json.loads((step_dir / "MANIFEST.json").read_text())
+        rt = current_runtime()
+        rec = getattr(rt, "recorder", None)
+        if rec is not None:
+            rec.on_ckpt("restore", step, "durable",
+                        len(manifest["shards"]))
         by_key: dict = {}
         for frag in manifest["shards"]:
             read_shard(step_dir / frag["file"], frag, by_key)

@@ -32,8 +32,13 @@ _EPS = 1e-9
 class Backend:
     """Interface the runtime drives."""
 
+    #: trace recorder (obs/), picked up from the runtime at bind; None
+    #: keeps every event site a single comparison away from doing nothing
+    recorder = None
+
     def bind(self, runtime) -> None:
         self.runtime = runtime
+        self.recorder = getattr(runtime, "recorder", None)
 
     def launch(self, task: TaskInstance, worker) -> None:
         raise NotImplementedError
@@ -173,6 +178,8 @@ class SimBackend(Backend):
                 "launch", t=self.clock, tid=task.tid,
                 sig=task.defn.signature, worker=worker.name,
                 device=task.device.name if task.device is not None else None)
+        if self.recorder is not None:
+            self.recorder.on_launch(task, worker)
         # read_penalty: the data-lifecycle catalog's simulated cost of
         # pulling tracked inputs from their fastest resident tier (0.0
         # unless the lifecycle subsystem is active — grant-time snapshot)
@@ -306,6 +313,8 @@ class SimBackend(Backend):
                 self.sanitizer.record(
                     "retry", t=self.clock, tid=task.tid,
                     sig=task.defn.signature, attempt=task.retries)
+            if self.recorder is not None:
+                self.recorder.on_retry(task)
             self.runtime._requeue_retry(task)
             return True
         task.state = TaskState.FAILED
@@ -340,6 +349,8 @@ class SimBackend(Backend):
                     f"{task.defn.name}#{task.tid}")
                 if self._fail_attempt(task, err):
                     continue
+                if self.recorder is not None:
+                    self.recorder.on_complete(task, failed=True)
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
@@ -366,6 +377,8 @@ class SimBackend(Backend):
         if t > self.clock:
             self._advance_to(t)
         eng.apply_due(self.clock)
+        if self.recorder is not None:
+            self.recorder.on_stall(self.clock, "bg_step")
         self._refresh_stale_devices()
         self.runtime.scheduler._dirty = True
         self.runtime._lifecycle_tick()
@@ -383,6 +396,8 @@ class SimBackend(Backend):
         transitions = feng.apply_due(self.clock)
         if transitions:
             self._on_failure_transitions(transitions)
+        if self.recorder is not None:
+            self.recorder.on_stall(self.clock, "fail_step")
         self._refresh_stale_devices()
         self.runtime.scheduler._dirty = True
         self.runtime._lifecycle_tick()
@@ -463,6 +478,8 @@ class SimBackend(Backend):
                             f"injected failure: "
                             f"{task.defn.name}#{task.tid}")):
                         continue
+                if self.recorder is not None:
+                    self.recorder.on_complete(task, failed=bool(inject))
                 for f in task.futures:
                     f.set_value(None)
                 rt._handle_completion(task)
@@ -560,6 +577,8 @@ class RealBackend(Backend):
     def launch(self, task: TaskInstance, worker) -> None:
         platform = "compute" if task.defn.task_type == TaskType.COMPUTE else "io"
         task.start_time = self.now()
+        if self.recorder is not None:
+            self.recorder.on_launch(task, worker)
         self._pool(worker, platform).submit(self._run, task)
 
     def _run(self, task: TaskInstance) -> None:
@@ -588,6 +607,11 @@ class RealBackend(Backend):
         else:
             task.futures[0].set_value(result)
         with self._cv:
+            if self.recorder is not None:
+                # RealBackend retries in-place inside this worker thread, so
+                # a failed attempt never re-enters the ready queue — the
+                # whole retry loop lands in this one complete event
+                self.recorder.on_complete(task, failed=task.error is not None)
             self.runtime._handle_completion(task)
             if task.error is not None:
                 self._failed.append(task)

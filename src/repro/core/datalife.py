@@ -251,6 +251,9 @@ class DataCatalog:
         # report them as diagnostics (IO204) over a plan that a live
         # runtime would refuse to construct
         self.config_errors: list[str] = []
+        # trace recorder (obs/): wired by the runtime when tracing is on;
+        # None costs one comparison per lifecycle event
+        self.recorder = None
         self._tier_order = cluster.tier_names()
         self._rank = {t: i for i, t in enumerate(self._tier_order)}
         # apply TierCapacity budgets before auto-detection
@@ -446,6 +449,8 @@ class DataCatalog:
             self._pending_pins.add(id(fut_or_obj))
             return None
         obj.pinned = True
+        if self.recorder is not None:
+            self.recorder.on_pin(self.now(), obj, True)
         return obj
 
     def unpin(self, fut_or_obj) -> Optional[DataObject]:
@@ -455,6 +460,8 @@ class DataCatalog:
             self._pending_pins.discard(id(fut_or_obj))
             return None
         obj.pinned = False
+        if self.recorder is not None:
+            self.recorder.on_pin(self.now(), obj, False)
         return obj
 
     def discard(self, fut_or_obj) -> Optional[DataObject]:
@@ -562,6 +569,8 @@ class DataCatalog:
         fut.task._datalife = ("stage", obj, tier)
         self.n_prefetches += 1
         self.bytes_prefetched_mb += obj.size_mb
+        if self.recorder is not None:
+            self.recorder.on_stage(self.now(), obj, tier)
 
     def _finish_stage(self, task: TaskInstance, obj: DataObject, tier: str,
                       failed: bool) -> None:
@@ -799,6 +808,8 @@ class DataCatalog:
                 "durable": self.durable_tier in obj.residency,
                 "pinned": obj.pinned, "ephemeral": obj.ephemeral,
             })
+            if self.recorder is not None:
+                self.recorder.on_evict(self.now(), obj, dev, "lost")
             if not obj.residency:
                 orphans.append(obj)
             elif dev.tier == self.durable_tier and not obj.ephemeral:
@@ -818,6 +829,8 @@ class DataCatalog:
             "pinned": obj.pinned,
             "ephemeral": obj.ephemeral,
         })
+        if self.recorder is not None:
+            self.recorder.on_evict(self.now(), obj, dev, mode)
 
     # ------------------------------------------------------------- summary
     def summary(self) -> dict:

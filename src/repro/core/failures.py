@@ -140,6 +140,9 @@ class FailureEngine:
         self._seq = itertools.count()
         self._heap: list[tuple[float, int, _Binding]] = []
         self.log: list[tuple[float, str, str, str]] = []  # (t, dev, prev, new)
+        # trace recorder (obs/): wired by the runtime when tracing is on;
+        # None costs one comparison per fired transition
+        self.recorder = None
         self.n_transitions = 0
         self._final: dict[int, FailureEvent] = {}  # id(dev) -> last event
         for ev in schedule.events:
@@ -179,6 +182,8 @@ class FailureEngine:
             dev.set_health(ev.state, ev.bw_factor)
             self.n_transitions += 1
             self.log.append((ev.t, dev.name, prev, ev.state))
+            if self.recorder is not None:
+                self.recorder.on_health(ev.t, dev, prev, ev.state)
             transitions.append((dev, prev, ev.state))
         return transitions
 

@@ -268,6 +268,9 @@ class InterferenceEngine:
             if burst is not None:
                 heapq.heappush(self._heap,
                                (burst.start, 1, next(self._seq), (i, burst)))
+        # trace recorder (obs/): wired by the runtime when tracing is on;
+        # None costs one comparison per burst boundary
+        self.recorder = None
         # stats
         self.n_bursts = 0
         self.bg_busy_time: dict[str, float] = {}     # device -> burst seconds
@@ -303,6 +306,10 @@ class InterferenceEngine:
         dev = b.device
         taken_bw = dev.add_background(burst.streams, burst.bw)
         taken_mb = dev.add_background_capacity(burst.capacity_mb)
+        if self.recorder is not None:
+            # what was actually claimed (clamped), not the model's ask
+            self.recorder.on_burst(burst.start, dev, "start",
+                                   burst.streams, taken_bw, taken_mb)
         self.n_bursts += 1
         if burst.duration != _INF:
             self.bg_busy_time[dev.name] = \
@@ -330,6 +337,9 @@ class InterferenceEngine:
         dev = self._bindings[bi].device
         dev.remove_background(burst.streams, taken_bw)
         dev.remove_background_capacity(taken_mb)
+        if self.recorder is not None:
+            self.recorder.on_burst(burst.start + burst.duration, dev, "end",
+                                   burst.streams, taken_bw, taken_mb)
 
     def summary(self) -> dict:
         return {

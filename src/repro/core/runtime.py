@@ -51,6 +51,7 @@ from typing import Optional
 
 from .autotune import DriftConfig
 from .backends import Backend, RealBackend, SimBackend
+from ..obs import TraceConfig, TraceRecorder
 from .constraints import parse_storage_bw
 from .datalife import DataCatalog, LifecycleConfig
 from .failures import FailureEngine
@@ -276,7 +277,8 @@ class IORuntime:
                  interference=None,
                  failures=None,
                  drift: Optional[DriftConfig] = None,
-                 tier_objective: bool = False):
+                 tier_objective: bool = False,
+                 trace=False):
         self.cluster = cluster
         # constructor config, replayed by rt.plan() to build the capture
         # sibling with the same lifecycle/interference/tuning setup
@@ -308,6 +310,30 @@ class IORuntime:
             set_tuning = getattr(self.scheduler, "set_tuning", None)
             if set_tuning is not None:
                 set_tuning(drift=drift, tier_objective=tier_objective)
+        # observability (obs/, docs/observability.md): trace=True (or a
+        # TraceConfig / prebuilt TraceRecorder) wires a recorder into every
+        # event site; None leaves each site a single is-not-None check away
+        # from doing nothing (bit-identical behaviour either way). The
+        # repro.trace CLI forces tracing on via obs.FORCE — same hijack
+        # pattern as forced capture above. Capture mode never traces:
+        # nothing executes, so there is nothing to time. Constructed BEFORE
+        # the engines attach so t=0 bursts/health transitions are recorded.
+        from .. import obs as _obs
+        obs_forced = _obs.FORCE and not self.capture_mode
+        if obs_forced and not trace:
+            trace = True
+        self.recorder = None
+        if trace and not self.capture_mode:
+            if isinstance(trace, TraceRecorder):
+                rec = trace
+            else:
+                cfg = trace if isinstance(trace, TraceConfig) else None
+                rec = TraceRecorder(cfg)
+            rec.bind(clock=self.backend.now, scheduler=self.scheduler)
+            self.recorder = rec
+            set_recorder = getattr(self.scheduler, "set_recorder", None)
+            if set_recorder is not None:
+                set_recorder(rec)
         # co-tenant interference (interference.py): an InterferenceEngine,
         # or an iterable of (tier-or-device, TrafficModel) pairs. Simulation
         # only — a real cluster injects its own co-tenants.
@@ -327,6 +353,7 @@ class IORuntime:
                         "the simulator; it is not supported on "
                         f"{type(backend).__name__}")
                 else:
+                    engine.recorder = self.recorder  # before t=0 bursts
                     backend.attach_interference(engine)
                     self.interference = engine
         # plan() replays the *resolved* engine (an iterable argument was
@@ -350,6 +377,7 @@ class IORuntime:
                         "simulator; it is not supported on "
                         f"{type(backend).__name__}")
                 else:
+                    feng.recorder = self.recorder  # before t=0 transitions
                     backend.attach_failures(feng)
                     self.failures = feng
         self._plan_config["failures"] = self.failures
@@ -363,12 +391,16 @@ class IORuntime:
             set_catalog = getattr(self.scheduler, "set_catalog", None)
             if set_catalog is not None:
                 set_catalog(self.catalog)
+        if self.recorder is not None:
+            self.catalog.recorder = self.recorder
         self._in_tick = False
         self._recovering = {}  # oid -> in-flight lineage-recovery Future
         self.backend.bind(self)
         self._entered = False
         if forced:
             _capture.register(self)  # the CLI lints every hijacked runtime
+        if obs_forced:
+            _obs.register(self)  # the CLI summarizes every traced runtime
 
     # ---------------------------------------------------------------- context
     def __enter__(self):
@@ -421,6 +453,8 @@ class IORuntime:
             if validate is not None:
                 validate(inst)
             inst.submit_time = self.backend.now()
+            if self.recorder is not None:
+                self.recorder.on_submit(inst)
             ready = self.graph.add(inst)
             if inst.state != TaskState.FAILED:
                 # scheduled-reader tracking (LRU clock + eviction guard);
@@ -850,6 +884,11 @@ class IORuntime:
         finally:
             _current.rt = prev
 
+    def trace(self) -> Optional[TraceRecorder]:
+        """The runtime's :class:`~repro.obs.TraceRecorder` when constructed
+        with ``trace=True`` (None otherwise — callers guard)."""
+        return self.recorder
+
     # ------------------------------------------------------------------ stats
     def stats(self) -> dict:
         done = self.scheduler.completed
@@ -887,4 +926,8 @@ class IORuntime:
                 if be.io_busy_time > 0 else 0.0,
                 "peak_io_mbs": be.peak_io_mbs,
             })
+        if self.recorder is not None:
+            # attribution rollup; absent when tracing is off so untraced
+            # stats stay schema-identical to pre-obs runs (golden parity)
+            out["wait_states"] = self.recorder.wait_state_summary()
         return out

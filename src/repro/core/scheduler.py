@@ -113,6 +113,9 @@ class Scheduler:
         # data lifecycle (datalife.py): None unless the runtime wires an
         # enabled catalog — the capacity-less hot path stays untouched
         self.catalog = None
+        # observability (obs/): None unless the runtime wires a recorder —
+        # a disabled run pays one is-not-None check per readiness/refusal
+        self.recorder = None
         self.capacity_blocked: dict[int, float] = {}  # id(dev) -> wanted MB
         # tuning extensions (interference.py / autotune.DriftConfig): both
         # default off, leaving the paper's placement byte-identical
@@ -132,6 +135,12 @@ class Scheduler:
         nearly-full fast tier would force."""
         self.drift_config = drift
         self.tier_objective = bool(tier_objective)
+
+    def set_recorder(self, recorder) -> None:
+        """Wire the trace recorder (runtime calls this when tracing is on):
+        readiness, grant refusals (diagnosed per placement class), and
+        queue-depth samples flow into the event stream."""
+        self.recorder = recorder
 
     def set_catalog(self, catalog) -> None:
         """Wire the data catalog (runtime calls this when the lifecycle
@@ -324,6 +333,8 @@ class Scheduler:
         sig = self._sig_key(task)
         self._sig_ready[sig] = self._sig_ready.get(sig, 0) + 1
         self._dirty = True
+        if self.recorder is not None:
+            self.recorder.on_ready(task, key)
 
     def make_ready_many(self, tasks: Iterable[TaskInstance]) -> None:
         """Batched completion fan-out: newly-ready children arrive together
@@ -377,9 +388,74 @@ class Scheduler:
                     # drop drained classes so rounds stay O(live classes)
                     # (per-call storage_bw overrides can mint many keys)
                     del self._ready_q[key]
+            elif self.recorder is not None:
+                # class blocked until the next round — diagnose why (pure
+                # reads) so ready->launch time is attributable per class
+                reason, dev_name, wanted = self._diagnose_block(task)
+                self.recorder.note_block(key, reason, dev_name, wanted)
             # else: class blocked until the next round — nothing that happens
             # later in this round can make it placeable (resources only shrink)
         return launched
+
+    def _diagnose_block(self, task: TaskInstance) -> tuple:
+        """Classify why ``task`` (a blocked class head) could not be placed
+        just now: re-walk the candidates the attempt tried with pure reads
+        (never mutates scheduler, tuner, or device state — recording must
+        leave placement byte-identical) and report the dominant refusal,
+        ``(reason, device_name, wanted_mb)``. Precedence mirrors severity:
+        capacity > bandwidth > executor > learning > offline."""
+        d = task.defn
+        if d.task_type == TaskType.COMPUTE:
+            return "cpu", None, 0.0
+        tier = task.tier
+        spec = task.storage_bw
+        bw = 0.0
+        if is_auto(spec):
+            if self.tier_objective and tier is None and self._tier_depth > 1:
+                # cross-tier objective: learning while any tier's curve is
+                # unlearned; afterwards diagnose with the first tier's choice
+                tuner = None
+                for tname in self.cluster.tier_names():
+                    t = self.tuners.get(self._tuner_key(d.signature, tname))
+                    if t is None or t.learning():
+                        return "learning", None, 0.0
+                    if tuner is None:
+                        tuner = t
+            else:
+                key = self._tuner_key(d.signature, tier)
+                tuner = self.tuners.get(key)
+                if tuner is None or tuner.learning():
+                    return "learning", None, 0.0
+            bw = tuner.peek_choice(max(1, self.n_ready_of(
+                self._sig_key(task))))
+        elif isinstance(spec, StaticSpec):
+            bw = spec.value
+        wanted = task.sim.io_bytes
+        seen: dict[str, Optional[str]] = {}
+        for w in self.cluster.workers:
+            devs = [w.tier_device(tier)] if tier is not None else w.tiers
+            for dev in devs:
+                if dev is None:
+                    continue
+                if dev.health == "offline":
+                    seen.setdefault("offline", dev.name)
+                elif w.learning_owner is not None \
+                        or id(dev) in self._learning_dev_ids:
+                    seen.setdefault("learning", dev.name)
+                elif w.free_io_executors <= 0:
+                    seen.setdefault("executor", dev.name)
+                elif bw > 0 and not dev.can_allocate(bw):
+                    seen.setdefault("bandwidth", dev.name)
+                elif self.catalog is not None \
+                        and dev.capacity_gb is not None and wanted > 0 \
+                        and not dev.can_reserve_capacity(wanted):
+                    seen.setdefault("capacity", dev.name)
+        for reason in ("capacity", "bandwidth", "executor", "learning",
+                       "offline"):
+            name = seen.get(reason)
+            if name is not None:
+                return reason, name, wanted if reason == "capacity" else 0.0
+        return "unattributed", None, 0.0
 
     def _try_place(self, task: TaskInstance) -> bool:
         if task.defn.task_type == TaskType.COMPUTE:

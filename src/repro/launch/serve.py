@@ -22,6 +22,7 @@ import numpy as np
 from ..configs import ARCHS, get_config, get_smoke_config
 from ..core import Cluster, IORuntime, RealBackend, StorageDevice, WorkerNode, io, task
 from ..models import Model
+from ..obs.report import percentile, span_latencies
 
 
 @io
@@ -53,29 +54,49 @@ def serve(cfg, *, n_requests=8, prompt_len=32, max_new=16, batch=4,
     done, t0 = [], time.monotonic()
     new_tokens = 0
     trace_tok = None
-    with IORuntime(cluster, backend=RealBackend()):
+    lat = []
+    with IORuntime(cluster, backend=RealBackend(), trace=True) as rt:
+        rec = rt.trace()  # None under repro.lint's capture mode
+        now = rec.now if rec is not None else (lambda: time.monotonic() - t0)
         queue = list(enumerate(prompts))
         while queue:
             wave, queue = queue[:batch], queue[batch:]
+            admit = {rid: now() for rid, _ in wave}
             toks = jnp.asarray(np.stack([p for _, p in wave]))
             logits, state = prefill(params, {"tokens": toks})
             out = [[] for _ in wave]
             nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+            first_tok = {}
             for step in range(max_new):
-                for i in range(len(wave)):
+                for i, (rid, _) in enumerate(wave):
                     out[i].append(int(nxt[i]))
+                    if rid not in first_tok:
+                        first_tok[rid] = now()
                 logits, state = decode(params, state, nxt)
                 nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
                 new_tokens += len(wave)
             for (rid, _), o in zip(wave, out):
-                rec = {"request": rid, "tokens": o,
+                t_end = now()
+                lat.append(t_end - admit[rid])
+                row = {"request": rid, "tokens": o,
                        "t": time.monotonic() - t0}
-                done.append(rec)
+                done.append(row)
+                if rec is not None:
+                    # admission -> first-token -> finish span; the span
+                    # event *is* the JSONL trace row, so the dumped file
+                    # and the recorder's stream stay one schema
+                    row = rec.span(
+                        f"req-{rid}", cat="request", t0=admit[rid],
+                        t1=t_end, request=rid, n_tokens=len(o),
+                        first_token_s=first_tok[rid] - admit[rid])
                 if trace_path:
-                    trace_tok = _dump_trace(trace_path, rec, trace_tok)
+                    trace_tok = _dump_trace(trace_path, row, trace_tok)
+        if rec is not None:
+            lat = span_latencies(rec, cat="request")
     wall = time.monotonic() - t0
     return {"requests": len(done), "new_tokens": new_tokens,
             "tokens_per_s": new_tokens / wall, "wall_s": wall,
+            "p50_s": percentile(lat, 0.50), "p99_s": percentile(lat, 0.99),
             "completions": done}
 
 
@@ -94,7 +115,8 @@ def main(argv=None):
     out = serve(cfg, n_requests=args.requests, prompt_len=args.prompt_len,
                 max_new=args.max_new, batch=args.batch, trace_path=args.trace)
     print(f"[serve] {out['requests']} requests, {out['new_tokens']} tokens, "
-          f"{out['tokens_per_s']:.1f} tok/s, wall {out['wall_s']:.1f}s")
+          f"{out['tokens_per_s']:.1f} tok/s, wall {out['wall_s']:.1f}s, "
+          f"latency p50 {out['p50_s']:.3f}s p99 {out['p99_s']:.3f}s")
     return 0
 
 

@@ -1,0 +1,32 @@
+"""Unified I/O observability: event tracing, per-tier metrics timelines,
+and wait-state attribution (docs/observability.md).
+
+Enable per-runtime with ``IORuntime(cluster, trace=True)`` (or pass a
+:class:`TraceConfig` / prebuilt :class:`TraceRecorder`), then read
+``rt.trace()`` / ``rt.stats()["wait_states"]``. The ``python -m
+repro.trace`` CLI instead sets :data:`FORCE`, which turns tracing on for
+every runtime a script constructs and registers it here — the same
+hijack pattern ``repro.lint`` uses for capture mode.
+"""
+from __future__ import annotations
+
+from .recorder import (EVENT_SCHEMA, WAIT_STATES, MetricsTimeline,
+                       TraceConfig, TraceRecorder)
+from . import perfetto, report
+
+#: When true, every IORuntime constructed enables tracing and registers
+#: its recorder in RUNS (set only by the ``repro.trace`` CLI driver).
+FORCE = False
+
+#: ``(label, runtime)`` pairs registered while FORCE was on.
+RUNS: list = []
+
+
+def register(runtime) -> None:
+    RUNS.append((f"runtime-{len(RUNS) + 1}", runtime))
+
+
+__all__ = [
+    "EVENT_SCHEMA", "WAIT_STATES", "MetricsTimeline", "TraceConfig",
+    "TraceRecorder", "perfetto", "report", "FORCE", "RUNS", "register",
+]

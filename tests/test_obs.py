@@ -1,0 +1,342 @@
+"""Observability subsystem tests (ISSUE 8): typed event stream, metrics
+timelines, wait-state attribution, Perfetto export, the ``rt.stats()``
+schema freeze, inertness/determinism guarantees, and the ``repro.trace``
+CLI."""
+import itertools
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (BurstyTraffic, Cluster, FailureSchedule, IORuntime,
+                        LifecycleConfig, SimBackend, StorageDevice,
+                        WorkerNode, constraint, io, task)
+from repro.core.datalife import DataObject
+from repro.core.task import TaskInstance
+from repro.obs import (EVENT_SCHEMA, WAIT_STATES, MetricsTimeline,
+                       TraceRecorder, perfetto)
+from repro.obs.report import attribution, percentile, span_latencies
+
+from benchmarks.failures import export_perfetto
+from benchmarks.interference import run_variant as interference_variant
+from benchmarks.sched_scale import run_workload
+
+
+def _fresh_ids():
+    TaskInstance._ids = itertools.count()
+    DataObject._ids = itertools.count()
+
+
+def _tiered_cluster(bb_capacity_gb=0.25):
+    bb = StorageDevice(name="bb0", bandwidth=800, per_stream_cap=80,
+                       tier="bb", capacity_gb=bb_capacity_gb)
+    fs = StorageDevice(name="fs0", bandwidth=300, per_stream_cap=30,
+                       tier="fs")
+    return Cluster(workers=[WorkerNode(name="w0", cpus=4, io_executors=8,
+                                       tiers=[bb, fs])])
+
+
+def _loaded_run(trace=True, n_steps=6):
+    """A run exercising every event site: interference bursts, a failure
+    transition, lifecycle evictions, auto + static constraints."""
+    _fresh_ids()
+    cotenant = [("bb", BurstyTraffic(seed=3, on_mean=2.0, off_mean=1.0,
+                                     streams=20, bw=300.0))]
+    # t=5.0 lands mid-way through step 1's shard burst (bb writes run
+    # 4.52-5.52 on the healthy timeline), so the bb death catches I/O in
+    # flight (-> retry events) with step 0's shards still resident on the
+    # dying tier (-> "lost" evict events)
+    sched = FailureSchedule([(5.0, "bb", "offline")])
+    with IORuntime(_tiered_cluster(), backend=SimBackend(),
+                   lifecycle=LifecycleConfig(auto_prefetch=False),
+                   interference=cotenant, failures=sched,
+                   trace=trace) as rt:
+        @task(returns=1)
+        def step(prev, gate, i):
+            pass
+
+        @constraint(storageBW=60, maxRetries=3)
+        @io
+        @task(returns=1)
+        def shard(x, i, j):
+            pass
+
+        prev, gate = None, None
+        for i in range(n_steps):
+            prev = step(prev, gate, i, duration=1.5)
+            gate = [shard(prev, i, j, io_mb=64.0) for j in range(3)]
+        rt.barrier(final=True)
+        return rt, rt.stats()
+
+
+# ----------------------------------------------------- stats schema freeze
+# the frozen rt.stats() contract (satellite: schema freeze). Every key
+# here must be present with the given type; "wait_states" must be present
+# exactly when the run was traced.
+STATS_BASE_SCHEMA = {
+    "makespan": float,
+    "n_tasks": int,
+    "n_io_tasks": int,
+    "avg_io_task_time": float,
+    "tuners": dict,
+    "devices": dict,
+}
+STATS_SIM_SCHEMA = {
+    "io_busy_time": float,
+    "compute_busy_time": float,
+    "overlap_time": float,
+    "total_io_mb": float,
+    "io_throughput_mbs": float,
+    "peak_io_mbs": float,
+}
+STATS_DEVICE_SCHEMA = {
+    "tier": str,
+    "bytes_written": float,
+    "capacity_mb": (float, type(None)),
+    "used_mb": float,
+    "peak_occupancy_mb": float,
+}
+WAIT_SUMMARY_SCHEMA = {
+    "states": dict,
+    "by_signature": dict,
+    "n_tasks": int,
+    "total_latency": float,
+    "residual": float,
+    "min_task_coverage": float,
+}
+
+
+def _check_schema(d, schema, where):
+    for key, typ in schema.items():
+        assert key in d, f"{where}: missing {key!r}"
+        assert isinstance(d[key], typ), \
+            f"{where}[{key!r}] is {type(d[key]).__name__}, want {typ}"
+
+
+def test_stats_schema_plain_run():
+    _fresh_ids()
+    with IORuntime(Cluster.make(n_workers=2, cpus=4, io_executors=4),
+                   backend=SimBackend()) as rt:
+        @io
+        @task()
+        def w(i):
+            pass
+
+        for i in range(4):
+            w(i, io_mb=10.0)
+        rt.barrier(final=True)
+        stats = rt.stats()
+    _check_schema(stats, STATS_BASE_SCHEMA, "stats")
+    _check_schema(stats, STATS_SIM_SCHEMA, "stats")
+    for name, dev in stats["devices"].items():
+        _check_schema(dev, STATS_DEVICE_SCHEMA, f"devices[{name}]")
+    # untraced -> no wait_states key: pre-obs consumers see an identical
+    # schema (golden parity depends on this)
+    assert "wait_states" not in stats
+    assert rt.trace() is None
+
+
+def test_stats_schema_loaded_traced_run():
+    rt, stats = _loaded_run(trace=True)
+    _check_schema(stats, STATS_BASE_SCHEMA, "stats")
+    _check_schema(stats, STATS_SIM_SCHEMA, "stats")
+    for sub in ("lifecycle", "interference", "failures"):
+        assert sub in stats, f"loaded run must report {sub}"
+    assert "wait_states" in stats
+    ws = stats["wait_states"]
+    _check_schema(ws, WAIT_SUMMARY_SCHEMA, "wait_states")
+    assert set(ws["states"]) == set(WAIT_STATES)
+    for sig, states in ws["by_signature"].items():
+        assert set(states) == set(WAIT_STATES), sig
+
+
+def test_stats_wait_states_present_iff_traced():
+    _, traced = _loaded_run(trace=True)
+    _, plain = _loaded_run(trace=False)
+    assert "wait_states" in traced
+    assert "wait_states" not in plain
+    # and the rest of the schema is unperturbed by tracing
+    t = {k: v for k, v in traced.items() if k != "wait_states"}
+    assert t == plain
+
+
+# ------------------------------------------------- determinism / inertness
+def test_tracing_is_inert_on_launch_log():
+    """Satellite: same seed workload, recorder on vs off -> bit-identical
+    launch log and stats (tracing is pure reads)."""
+    log_off, stats_off, _ = run_workload(300, trace=False)
+    log_on, stats_on, _ = run_workload(300, trace=True)
+    assert log_on == log_off
+    assert stats_on.pop("wait_states") is not None
+    assert stats_on == stats_off
+
+
+def test_traced_run_is_byte_deterministic():
+    """Same seed twice -> byte-identical exported trace (Sim only: the
+    recorder's clock is the sim clock, so no wall time leaks in)."""
+    rt1, _ = _loaded_run(trace=True)
+    rt2, _ = _loaded_run(trace=True)
+    assert perfetto.dumps(rt1.recorder) == perfetto.dumps(rt2.recorder)
+    assert rt1.recorder.to_jsonl() == rt2.recorder.to_jsonl()
+
+
+# ------------------------------------------------------- event stream shape
+def test_event_stream_matches_frozen_schema():
+    rt, _ = _loaded_run(trace=True)
+    rec = rt.recorder
+    assert rec.events, "loaded run must record events"
+    seen_types = set()
+    for ev in rec.events:
+        et = ev["type"]
+        assert et in EVENT_SCHEMA, f"unknown event type {et!r}"
+        seen_types.add(et)
+        fields = EVENT_SCHEMA[et]
+        for f, types in fields.items():
+            assert f in ev, f"{et} event missing field {f!r}: {ev}"
+            assert isinstance(ev[f], types), \
+                f"{et}.{f} is {type(ev[f]).__name__}: {ev}"
+        extra = set(ev) - set(fields) - {"type"}
+        assert not extra, f"{et} event has undeclared fields {extra}"
+    # the loaded scenario exercises the full taxonomy
+    for expected in ("submit", "ready", "launch", "complete", "retry",
+                     "burst", "health", "evict"):
+        assert expected in seen_types, f"no {expected} events recorded"
+
+
+def test_jsonl_roundtrip():
+    rt, _ = _loaded_run(trace=True)
+    lines = rt.recorder.to_jsonl().splitlines()
+    assert len(lines) == len(rt.recorder.events)
+    for line in lines:
+        assert json.loads(line)["type"] in EVENT_SCHEMA
+
+
+def test_metrics_timeline_rows():
+    rt, _ = _loaded_run(trace=True)
+    tl = rt.recorder.timeline
+    rows = tl.device_rows("bb0")
+    assert rows, "bb0 must have been sampled"
+    for row in rows:
+        assert set(row) == set(MetricsTimeline.ROW_FIELDS)
+    ts = [r["t"] for r in rows]
+    assert ts == sorted(ts)
+    assert len(ts) == len(set(ts)), "same-t samples must collapse"
+
+
+# --------------------------------------------------- wait-state attribution
+def test_wait_attribution_covers_every_task_on_interference_bench():
+    """Acceptance bar: on the interference benchmark every task's
+    end-to-end latency is >= 95% attributed, residual explicit."""
+    out = interference_variant(True, 12, seed=12061, trace=True)
+    ws = out["wait_states"]
+    assert ws is not None
+    assert ws["n_tasks"] > 0
+    assert ws["min_task_coverage"] >= 0.95
+    assert "residual" in ws
+
+
+def test_wait_breakdown_sums_to_latency():
+    rt, _ = _loaded_run(trace=True)
+    rec = rt.recorder
+    assert rec.waits, "tasks must have wait records"
+    for tid, w in rec.waits.items():
+        if w.end_t is None:
+            continue
+        b = rec.task_breakdown(tid)
+        assert b["coverage"] >= 0.95, (tid, b)
+        parts = sum(b[k] for k in WAIT_STATES)
+        assert parts + b["residual"] == pytest.approx(b["total"])
+
+
+def test_attribution_includes_critical_path():
+    rt, _ = _loaded_run(trace=True)
+    rep = attribution(rt.recorder, graph=rt.graph)
+    assert set(rep) == {"wait_states", "critical_path"}
+    cp = rep["critical_path"]
+    assert len(cp["path"]) > 1, "chain workload must yield a multi-node path"
+    assert cp["length"] > 0
+    assert 0.0 <= cp["congestion_fraction"] <= 1.0
+
+
+# ----------------------------------------------------------------- perfetto
+def test_failures_bench_perfetto_export(tmp_path):
+    """Acceptance: the failures-bench Perfetto export is structurally a
+    Chrome trace with burst, health-transition, and eviction tracks."""
+    out = tmp_path / "failures_trace.json"
+    meta = export_perfetto(str(out), n_steps=4, t_fail=5.0)
+    doc = json.loads(out.read_text())
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    assert meta["n_trace_events"] == len(evs)
+    for ev in evs:
+        assert {"ph", "pid", "name"} <= set(ev), ev
+    phases = {(e["ph"], e.get("cat")) for e in evs}
+    assert ("b", "burst") in phases and ("e", "burst") in phases
+    assert ("i", "health") in phases
+    assert ("i", "evict") in phases
+    assert any(e["ph"] == "X" for e in evs), "task slices missing"
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert any(n.startswith("bandwidth") for n in counters)
+    # device tracks are named via process metadata
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+
+
+def test_perfetto_span_events():
+    rec = TraceRecorder()
+    rec.span("req-0", cat="request", t0=0.5, t1=1.25, n_tokens=4)
+    evs = json.loads(perfetto.dumps(rec))["traceEvents"]
+    b = [e for e in evs if e["ph"] == "b" and e["cat"] == "request"]
+    e = [e for e in evs if e["ph"] == "e" and e["cat"] == "request"]
+    assert len(b) == 1 and len(e) == 1
+    assert e[0]["ts"] - b[0]["ts"] == pytest.approx(0.75e6)
+
+
+# ------------------------------------------------------------------ rollups
+def test_percentile():
+    assert percentile([], 0.5) == 0.0
+    assert percentile([3.0], 0.99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == pytest.approx(2.5)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.0) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 1.0) == 4.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 0.5) == pytest.approx(2.5)
+
+
+def test_span_latencies():
+    rec = TraceRecorder()
+    rec.span("a", cat="request", t0=0.0, t1=2.0)
+    rec.span("b", cat="request", t0=1.0, t1=1.5)
+    rec.span("c", cat="other", t0=0.0, t1=9.0)
+    assert span_latencies(rec, cat="request") == [2.0, 0.5]
+
+
+# ---------------------------------------------------------------------- CLI
+def test_trace_cli_smoke(tmp_path):
+    script = tmp_path / "tiny.py"
+    script.write_text(
+        "from repro.core import Cluster, IORuntime, SimBackend, io, task\n"
+        "with IORuntime(Cluster.make(n_workers=1, cpus=2, io_executors=2),\n"
+        "               backend=SimBackend()) as rt:\n"
+        "    @io\n"
+        "    @task()\n"
+        "    def w(i):\n"
+        "        pass\n"
+        "    for i in range(3):\n"
+        "        w(i, io_mb=5.0)\n"
+        "    rt.barrier(final=True)\n")
+    pf = tmp_path / "trace.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.trace", str(script),
+         "--json", "--perfetto", str(pf)],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc and doc[0]["n_events"] > 0
+    assert json.loads(pf.read_text())["traceEvents"]
+
+
+def test_trace_cli_missing_file_exits_2():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.trace", "/no/such/script.py"],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 2
