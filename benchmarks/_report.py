@@ -19,12 +19,102 @@ the CI asserts read those) and adds a uniform ``"_envelope"`` block::
 ``wait_states`` is the :meth:`repro.obs.TraceRecorder.wait_state_summary`
 rollup when the benchmark ran traced (see docs/observability.md), else
 None — presence of the key is uniform so consumers need no schema probe.
+
+Bench trajectory
+----------------
+``write_report(..., headline_metric=(name, value, direction))``
+additionally appends one JSONL line to ``BENCH_history.jsonl`` (next to
+the report, or ``history_path=``) keyed by bench / seed / git sha, so
+successive runs build a metric trajectory.
+``python -m benchmarks.run --check-regress`` (:func:`check_regress`)
+compares each (bench, metric)'s latest value against the median of its
+recorded priors and flags a >15% regression — ``direction`` says which
+way is worse (``"min"``: lower is better, a rise regresses; ``"max"``:
+higher is better, a drop regresses).
 """
 from __future__ import annotations
 
 import json
+import os
 
 SCHEMA_VERSION = 1
+
+
+def _git_sha():
+    try:
+        import subprocess
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except Exception:  # noqa: BLE001 — history works outside a checkout
+        return None
+
+
+def append_history(history_path: str, *, bench: str, metric: str,
+                   value: float, direction: str = "min",
+                   seed=None) -> dict:
+    """Append one trajectory entry (JSONL: append-mode, no rewrite)."""
+    if direction not in ("min", "max"):
+        raise ValueError(f"direction must be 'min' or 'max', "
+                         f"got {direction!r}")
+    entry = {"bench": bench, "seed": seed, "git": _git_sha(),
+             "metric": metric, "value": float(value),
+             "direction": direction}
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def read_history(history_path: str) -> list:
+    """Parse a trajectory file; unparsable lines are skipped (a killed
+    writer can leave a torn last line)."""
+    entries = []
+    if not os.path.exists(history_path):
+        return entries
+    with open(history_path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except ValueError:
+                continue
+    return entries
+
+
+def check_regress(history_path: str, threshold: float = 0.15) -> list:
+    """Flag every (bench, metric) whose latest value regresses more than
+    ``threshold`` (fractional) against the median of its prior entries.
+    Returns a list of finding dicts; groups with fewer than 2 entries are
+    skipped (no trajectory to regress against)."""
+    groups: dict[tuple, list] = {}
+    for e in read_history(history_path):
+        if not isinstance(e, dict) or "value" not in e:
+            continue
+        groups.setdefault((e.get("bench"), e.get("metric")), []).append(e)
+    findings = []
+    for (bench, metric), entries in sorted(groups.items()):
+        if len(entries) < 2:
+            continue
+        latest = entries[-1]
+        priors = sorted(e["value"] for e in entries[:-1])
+        n = len(priors)
+        baseline = priors[n // 2] if n % 2 \
+            else 0.5 * (priors[n // 2 - 1] + priors[n // 2])
+        direction = latest.get("direction", "min")
+        value = latest["value"]
+        if direction == "max":
+            regressed = value < baseline * (1.0 - threshold)
+        else:
+            regressed = value > baseline * (1.0 + threshold)
+        findings.append({
+            "bench": bench, "metric": metric, "value": value,
+            "baseline": baseline, "direction": direction,
+            "n_prior": n, "regressed": regressed,
+            "git": latest.get("git"),
+        })
+    return findings
 
 
 def make_report(headline: dict, *, bench: str, seed=None, config=None,
@@ -46,9 +136,18 @@ def make_report(headline: dict, *, bench: str, seed=None, config=None,
 
 
 def write_report(path: str, headline: dict, *, bench: str, seed=None,
-                 config=None, wait_states=None) -> dict:
+                 config=None, wait_states=None, headline_metric=None,
+                 history_path=None) -> dict:
     report = make_report(headline, bench=bench, seed=seed, config=config,
                          wait_states=wait_states)
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
+    if headline_metric is not None:
+        name, value, direction = headline_metric
+        if history_path is None:
+            history_path = os.path.join(
+                os.path.dirname(os.path.abspath(path)),
+                "BENCH_history.jsonl")
+        append_history(history_path, bench=bench, metric=name,
+                       value=value, direction=direction, seed=seed)
     return report

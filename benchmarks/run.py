@@ -2,12 +2,40 @@
 the roofline table. Prints ``name,value,derived`` CSV (deliverable d).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig10,...]
+
+``--check-regress`` instead audits the recorded bench trajectory
+(``BENCH_history.jsonl``, appended by ``write_report(...,
+headline_metric=)``) and exits 1 when any (bench, metric)'s latest value
+regresses more than ``--regress-threshold`` vs the median of its priors.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+
+
+def _check_regress(history: str, threshold: float) -> int:
+    from ._report import check_regress
+    findings = check_regress(history, threshold)
+    if not findings:
+        print(f"no bench trajectory with >=2 entries in {history} — "
+              f"nothing to check")
+        return 0
+    bad = 0
+    print(f"{'bench':<16} {'metric':<28} {'latest':>12} {'baseline':>12} "
+          f"{'dir':>4}  verdict")
+    for f in findings:
+        verdict = "REGRESSED" if f["regressed"] else "ok"
+        bad += f["regressed"]
+        print(f"{f['bench']:<16} {f['metric']:<28} {f['value']:>12.4g} "
+              f"{f['baseline']:>12.4g} {f['direction']:>4}  {verdict} "
+              f"(n_prior={f['n_prior']})")
+    if bad:
+        print(f"{bad} metric(s) regressed >{threshold:.0%} vs trajectory",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 def main(argv=None):
@@ -17,7 +45,16 @@ def main(argv=None):
                          "fig21,fig22,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="skip the slowest sweeps (fig22 variants half)")
+    ap.add_argument("--check-regress", action="store_true",
+                    help="audit BENCH_history.jsonl for headline-metric "
+                         "regressions instead of running benchmarks")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="trajectory file for --check-regress")
+    ap.add_argument("--regress-threshold", type=float, default=0.15,
+                    help="fractional regression tolerance (default 0.15)")
     args = ap.parse_args(argv)
+    if args.check_regress:
+        return _check_regress(args.history, args.regress_threshold)
     only = set(args.only.split(",")) if args.only else None
 
     from . import figures

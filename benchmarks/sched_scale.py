@@ -173,7 +173,8 @@ def main(argv=None) -> dict:
           f"-> speedup {tag} {scale['speedup']:.1f}x")
     report = write_report(
         args.out, {"golden": golden, "scale": scale}, bench="sched_scale",
-        config={"n": args.n, "golden_n": args.golden_n})
+        config={"n": args.n, "golden_n": args.golden_n},
+        headline_metric=("scale_new_seconds", scale["new_seconds"], "min"))
     print(f"wrote {args.out}")
     return report
 

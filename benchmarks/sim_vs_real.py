@@ -1,0 +1,218 @@
+"""Sim-vs-real validation benchmark: does calibration shrink model error?
+
+Runs one DAG three ways on a two-tier cluster (ssd + fs):
+
+1. **measured** — ``RealBackend(tier_dirs=)`` writing real files (+fsync)
+   into per-tier temp directories, traced, TelemetryHub collecting
+   per-device throughput samples across concurrency waves k=1..8;
+2. **predicted (default)** — ``SimBackend`` with the stock
+   ``StorageDevice`` parameters (450/8 ssd, 300/4 fs MB/s), which bear no
+   relation to what the temp filesystem actually delivers;
+3. **predicted (fitted)** — ``SimBackend`` again, after
+   :func:`repro.obs.telemetry.fit_tiers` turned the measured samples into
+   per-tier ``{bandwidth, per_stream_cap, congestion_alpha}`` and
+   :func:`apply_tier_config` fed them back into the cluster.
+
+Acceptance (asserted here, pinned in ``BENCH_simreal.json``): the median
+per-task |relative duration error| of the fitted config is **strictly
+lower** than the default's on the same DAG, every active device produced
+at least one telemetry sample, and the per-tier fitted-vs-configured
+bandwidth is reported.
+
+  PYTHONPATH=src python -m benchmarks.sim_vs_real [--quick] \\
+      [--out BENCH_simreal.json] [--perfetto OUT.json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import tempfile
+
+from repro.core import IORuntime, RealBackend, SimBackend, io, task
+from repro.core.resources import Cluster, StorageDevice, WorkerNode
+from repro.obs import compare as obs_compare
+from repro.obs import perfetto
+from repro.obs.telemetry import apply_tier_config, fit_tiers
+
+from ._report import write_report
+
+FULL_WAVES = (1, 1, 2, 2, 4, 4, 8, 8)
+QUICK_WAVES = (1, 2, 4)
+FULL_MB = 16.0
+QUICK_MB = 4.0
+
+
+def make_cluster() -> Cluster:
+    """One worker, two tiers with the stock (deliberately wrong for a temp
+    filesystem) congestion parameters."""
+    ssd = StorageDevice(name="ssd0", tier="ssd")               # 450 / 8
+    fs = StorageDevice(name="fs0", bandwidth=300.0,
+                       per_stream_cap=4.0, tier="fs")
+    return Cluster(workers=[WorkerNode(name="w0", cpus=2,
+                                       io_executors=16,
+                                       tiers=[ssd, fs])])
+
+
+def _make_writer(sig: str):
+    """A tier-pinned I/O task that writes ``mb`` MB (+fsync) into
+    ``dirpath`` — a real transfer under RealBackend, a modelled one (via
+    ``io_mb=``) under SimBackend."""
+    chunk = b"\0" * (1 << 20)
+
+    def _write(dirpath, name, mb):
+        path = os.path.join(dirpath, name)
+        with open(path, "wb") as f:
+            whole = int(mb)
+            for _ in range(whole):
+                f.write(chunk)
+            frac = mb - whole
+            if frac > 0:
+                f.write(b"\0" * int(frac * (1 << 20)))
+            f.flush()
+            os.fsync(f.fileno())
+        return path
+
+    _write.__name__ = sig
+    return io(task(returns=1)(_write))
+
+
+def run_dag(rt, tier_dirs: dict, mb: float, waves) -> None:
+    """Concurrency waves per tier: k parallel writes on each tier, a
+    wait_on barrier between waves so the telemetry sees clean depths."""
+    writers = {"ssd": _make_writer("ssd_write"),
+               "fs": _make_writer("fs_write")}
+    n = 0
+    for k in waves:
+        wave = []
+        for tier, writer in writers.items():
+            for _ in range(k):
+                wave.append(writer(
+                    tier_dirs.get(tier, ""), f"{tier}-{n}.bin", mb,
+                    io_mb=mb, storage_tier=tier))
+                n += 1
+        rt.wait_on(*wave)
+    rt.barrier(final=True)
+
+
+def run_real(tier_base: str, mb: float, waves) -> IORuntime:
+    cluster = make_cluster()
+    tier_dirs = {}
+    for tier in cluster.tier_names():
+        d = os.path.join(tier_base, tier)
+        os.makedirs(d, exist_ok=True)
+        tier_dirs[tier] = d
+    rt = IORuntime(cluster, backend=RealBackend(tier_dirs=tier_dirs),
+                   trace=True)
+    with rt:
+        run_dag(rt, tier_dirs, mb, waves)
+    return rt
+
+
+def run_sim(mb: float, waves, tier_config=None) -> IORuntime:
+    cluster = make_cluster()
+    if tier_config:
+        apply_tier_config(cluster, tier_config)
+    rt = IORuntime(cluster, backend=SimBackend())
+    with rt:
+        run_dag(rt, {}, mb, waves)
+    return rt
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller writes + fewer waves (CI smoke)")
+    ap.add_argument("--mb", type=float, default=None,
+                    help="MB per write (default 16, quick 4)")
+    ap.add_argument("--out", default="BENCH_simreal.json")
+    ap.add_argument("--perfetto", default=None, metavar="OUT.json",
+                    help="export the measured run's Chrome trace-event "
+                         "JSON")
+    ap.add_argument("--tier-base", default=None,
+                    help="directory for real tier I/O (default: fresh "
+                         "temp dir, removed afterwards)")
+    args = ap.parse_args(argv)
+
+    waves = QUICK_WAVES if args.quick else FULL_WAVES
+    mb = args.mb if args.mb is not None else \
+        (QUICK_MB if args.quick else FULL_MB)
+    tier_base = args.tier_base or tempfile.mkdtemp(prefix="simreal_")
+    cleanup = args.tier_base is None
+
+    try:
+        real_rt = run_real(tier_base, mb, waves)
+    finally:
+        if cleanup:
+            shutil.rmtree(tier_base, ignore_errors=True)
+    stats = real_rt.stats()
+    telemetry = stats["telemetry"]
+    active = {name: d for name, d in telemetry["devices"].items()
+              if d["n_ops"] > 0}
+    assert active, "real run produced no telemetry samples"
+    for name, d in active.items():
+        assert d["n_samples"] >= 1, f"device {name} has no samples"
+
+    sim_default = run_sim(mb, waves)
+    rep_default = obs_compare.duration_error_report(sim_default, real_rt)
+
+    fitted_cfg = fit_tiers(real_rt.backend.telemetry)
+    sim_fitted = run_sim(mb, waves, tier_config=fitted_cfg)
+    rep_fitted = obs_compare.duration_error_report(sim_fitted, real_rt)
+
+    med_default = rep_default["median_abs_rel_error"]
+    med_fitted = rep_fitted["median_abs_rel_error"]
+    assert med_default is not None and med_fitted is not None
+    assert med_fitted < med_default, (
+        f"calibration did not shrink the model error: fitted "
+        f"{med_fitted:.3g} vs default {med_default:.3g}")
+
+    tier_fit = obs_compare.tier_fit_report(real_rt, sim_default.cluster)
+    tiers = {}
+    for tier, entry in tier_fit.items():
+        f, c = entry.get("fitted"), entry.get("configured")
+        tiers[tier] = {
+            "configured_bw": c["bandwidth"] if c else None,
+            "fitted_bw": f["bandwidth"] if f else None,
+            "configured_stream": c["per_stream_cap"] if c else None,
+            "fitted_stream": f["per_stream_cap"] if f else None,
+            "fitted_alpha": f["congestion_alpha"] if f else None,
+            "n_samples": f["n_samples"] if f else 0,
+        }
+
+    headline = {
+        "median_rel_error_default": med_default,
+        "median_rel_error_fitted": med_fitted,
+        "error_reduction": med_default / med_fitted
+        if med_fitted > 0 else float("inf"),
+        "n_pairs": rep_default["n_pairs"],
+        "n_telemetry_devices": len(active),
+        "tiers": tiers,
+    }
+    print(f"sim-vs-real: median |rel err| default {med_default:.3g} -> "
+          f"fitted {med_fitted:.3g} "
+          f"({headline['error_reduction']:.1f}x tighter) over "
+          f"{rep_default['n_io_pairs']} I/O pairs")
+    for tier, t in sorted(tiers.items()):
+        if t["fitted_bw"] is not None:
+            print(f"  {tier:<4} bandwidth configured "
+                  f"{t['configured_bw']:.0f} MB/s -> fitted "
+                  f"{t['fitted_bw']:.0f} MB/s "
+                  f"(per-stream {t['configured_stream']:.0f} -> "
+                  f"{t['fitted_stream']:.0f})")
+
+    report = write_report(
+        args.out, headline, bench="sim_vs_real",
+        config={"mb": mb, "waves": list(waves), "quick": args.quick},
+        wait_states=stats.get("wait_states"),
+        headline_metric=("median_rel_error_fitted", med_fitted, "min"))
+    if args.perfetto:
+        with open(args.perfetto, "w") as f:
+            f.write(perfetto.dumps(real_rt.recorder))
+        print(f"perfetto trace written: {args.perfetto}")
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -341,6 +341,15 @@ class AutoTuner:
         self.record_choice(c)
         return c
 
+    def drift_state(self) -> dict:
+        """Snapshot of the steady-phase drift window: how many
+        observed-vs-predicted ratios are pending and their current median
+        (None until the first observation). Pure read — the telemetry
+        rollup and the sim-vs-real harness surface it."""
+        obs = list(self._obs)
+        med = sorted(obs)[len(obs) // 2] if obs else None
+        return {"n_obs": len(obs), "median_ratio": med}
+
     def summary(self) -> dict:
         return {
             "signature": self.signature,
@@ -357,4 +366,5 @@ class AutoTuner:
             "choice_counts": dict(self._choice_counts),
             "n_recalibrations": self.n_recalibrations,
             "drift_enabled": self.drift is not None,
+            "drift_window": self.drift_state(),
         }

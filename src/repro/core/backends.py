@@ -520,6 +520,15 @@ class RealBackend(Backend):
         self._poll = poll_interval
         self._failed: list[TaskInstance] = []
         self.tier_dirs = dict(tier_dirs) if tier_dirs else {}
+        # measured per-device throughput (obs/telemetry.py): fed on every
+        # I/O launch/complete; always collecting (cheap — one dict/deque
+        # update per op), emitted as trace events only when the run is
+        # traced. The simulator has no hub, which is what gates the
+        # stats()["telemetry"] key to real runs.
+        from ..obs.telemetry import TelemetryHub  # lazy: obs pulls nothing
+        #                                           from core, but keep the
+        #                                           import edge one-way
+        self.telemetry = TelemetryHub()
 
     def tier_path(self, tier: str, name: str) -> Optional[str]:
         """Absolute path of ``name`` inside ``tier``'s directory, or None
@@ -547,6 +556,7 @@ class RealBackend(Backend):
                 f"{runtime.cluster.tier_names()}) — a path= drain/prefetch "
                 f"targeting them could never resolve its endpoint")
         self._cv = threading.Condition(runtime.lock)
+        self.telemetry.bind(self.recorder)
 
     def now(self) -> float:
         return time.monotonic() - self._t0
@@ -577,6 +587,12 @@ class RealBackend(Backend):
     def launch(self, task: TaskInstance, worker) -> None:
         platform = "compute" if task.defn.task_type == TaskType.COMPUTE else "io"
         task.start_time = self.now()
+        if task.defn.task_type == TaskType.IO and task.device is not None:
+            # launch-side concurrency snapshot: the fit harness groups
+            # samples by the depth the op ran under (launch is always under
+            # the runtime lock — submit/schedule_pass hold it)
+            task._telemetry_k = self.telemetry.on_launch(
+                task.start_time, task.device)
         if self.recorder is not None:
             self.recorder.on_launch(task, worker)
         self._pool(worker, platform).submit(self._run, task)
@@ -588,8 +604,14 @@ class RealBackend(Backend):
         result = None
         attempts = task.defn.max_retries + 1
         for attempt in range(attempts):
+            attempt_t0 = time.monotonic()
             try:
                 result = task.defn.fn(*args, **kwargs)
+                # measured wall time of the successful attempt alone: the
+                # signal the drift monitor compares against the learned
+                # curve (task.duration would also count pool queueing,
+                # argument resolution and earlier attempts' backoff)
+                task.measured_duration = time.monotonic() - attempt_t0
                 err = None
                 break
             except BaseException as e:  # noqa: BLE001 — report at barrier
@@ -607,6 +629,13 @@ class RealBackend(Backend):
         else:
             task.futures[0].set_value(result)
         with self._cv:
+            if task.defn.task_type == TaskType.IO and task.device is not None:
+                # measured sample under the runtime lock (same critical
+                # section as the complete event, so trace order matches)
+                self.telemetry.on_complete(
+                    task.end_time, task.device, task.sim.io_bytes,
+                    task.measured_duration, failed=task.error is not None,
+                    launch_inflight=task._telemetry_k)
             if self.recorder is not None:
                 # RealBackend retries in-place inside this worker thread, so
                 # a failed attempt never re-enters the ready queue — the

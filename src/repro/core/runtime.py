@@ -302,6 +302,17 @@ class IORuntime:
         if forced:
             backend = _capture.CaptureBackend()
         self.capture_mode = bool(getattr(backend, "is_capture", False))
+        # forced backend substitution (the repro.compare CLI): the
+        # sim-vs-real harness runs the same unmodified script once under
+        # SimBackend and once under RealBackend(tier_dirs=). Capture wins —
+        # a lint pass must never execute task bodies.
+        from .. import obs as _obs
+        self._backend_forced = False
+        if _obs.FORCE_BACKEND is not None and not self.capture_mode:
+            forced_be = _obs.FORCE_BACKEND(cluster, backend)
+            if forced_be is not None and forced_be is not backend:
+                backend = forced_be
+                self._backend_forced = True
         self.backend = backend
         self.lock = threading.RLock()
         self.graph = TaskGraph()
@@ -318,7 +329,6 @@ class IORuntime:
         # pattern as forced capture above. Capture mode never traces:
         # nothing executes, so there is nothing to time. Constructed BEFORE
         # the engines attach so t=0 bursts/health transitions are recorded.
-        from .. import obs as _obs
         obs_forced = _obs.FORCE and not self.capture_mode
         if obs_forced and not trace:
             trace = True
@@ -348,10 +358,15 @@ class IORuntime:
                     # never attached — capture injects no traffic
                     self.interference = engine
                 elif not isinstance(backend, SimBackend):
-                    raise ValueError(
-                        "interference injection models co-tenant traffic in "
-                        "the simulator; it is not supported on "
-                        f"{type(backend).__name__}")
+                    if not self._backend_forced:
+                        raise ValueError(
+                            "interference injection models co-tenant "
+                            "traffic in the simulator; it is not supported "
+                            f"on {type(backend).__name__}")
+                    # forced substitution (repro.compare): injected
+                    # co-tenants only exist in the simulator — the measured
+                    # leg sees the real machine's own traffic instead, so
+                    # the engine is dropped rather than refusing the run
                 else:
                     engine.recorder = self.recorder  # before t=0 bursts
                     backend.attach_interference(engine)
@@ -372,10 +387,13 @@ class IORuntime:
                     # never attached — capture flips no device health
                     self.failures = feng
                 elif not isinstance(backend, SimBackend):
-                    raise ValueError(
-                        "failure injection drives device health in the "
-                        "simulator; it is not supported on "
-                        f"{type(backend).__name__}")
+                    if not self._backend_forced:
+                        raise ValueError(
+                            "failure injection drives device health in the "
+                            "simulator; it is not supported on "
+                            f"{type(backend).__name__}")
+                    # forced substitution (repro.compare): dropped, like
+                    # the interference engine above
                 else:
                     feng.recorder = self.recorder  # before t=0 transitions
                     backend.attach_failures(feng)
@@ -575,6 +593,8 @@ class IORuntime:
         task.epoch = None
         task.tuner_key = None
         task.error = None
+        task.measured_duration = None
+        task._telemetry_k = 0
         if task.tier is not None and \
                 not eligible_devices(self.cluster, task.tier):
             # the pinned tier went entirely offline: fall back to
@@ -930,4 +950,11 @@ class IORuntime:
             # attribution rollup; absent when tracing is off so untraced
             # stats stay schema-identical to pre-obs runs (golden parity)
             out["wait_states"] = self.recorder.wait_state_summary()
+            hub = getattr(self.backend, "telemetry", None)
+            if hub is not None:
+                # measured-throughput rollup: present exactly when the run
+                # was traced AND the backend measures (RealBackend carries
+                # a TelemetryHub, the simulator does not) — sim stats stay
+                # schema-identical with the telemetry wiring present
+                out["telemetry"] = hub.summary()
         return out

@@ -736,6 +736,15 @@ class Scheduler:
                     dev.cancel_reservation(task.reserved_mb)
                 else:
                     dev.commit_capacity(task.reserved_mb)
+        # the duration the tuner/drift feedback sees: the RealBackend
+        # records the final successful attempt's wall time on the task
+        # (measured_duration) — task.duration there also counts pool
+        # queueing, argument resolution and failed attempts' backoff, which
+        # would poison the learned T(n, c) curve. Sim tasks never set it,
+        # so the modelled duration feeds through bit-identically.
+        dur = task.measured_duration
+        if dur is None:
+            dur = task.duration
         if task.epoch is not None:
             # the grant recorded which (signature, tier) tuner admitted it —
             # under the cross-tier objective a tier-agnostic task may have
@@ -744,7 +753,7 @@ class Scheduler:
             key = task.tuner_key or self._tuner_key(
                 task.defn.signature, task.tier)
             tuner = self.tuners[key]
-            tuner.on_task_complete(task.duration)
+            tuner.on_task_complete(dur)
             if not tuner.learning():
                 self._release_learning_node(key)
         elif self.drift_config is not None and task.tuner_key is not None:
@@ -752,7 +761,7 @@ class Scheduler:
             # against the learned curve; the tuner may re-enter calibration
             tuner = self.tuners.get(task.tuner_key)
             if tuner is not None:
-                tuner.observe(task.granted_bw, task.duration)
+                tuner.observe(task.granted_bw, dur)
         self.completed.append(task)
         self._dirty = True  # a resource was freed (and maybe an epoch advanced)
 

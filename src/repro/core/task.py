@@ -165,6 +165,17 @@ class TaskInstance:
         self.submit_time: float = 0.0
         self.start_time: float = 0.0
         self.end_time: float = 0.0
+        self.measured_duration: Optional[float] = None  # wall time of the
+        #                                      final successful attempt alone
+        #                                      (RealBackend). duration =
+        #                                      end-start also counts pool
+        #                                      queueing, argument resolution
+        #                                      and failed attempts' backoff;
+        #                                      the tuner/drift feedback wants
+        #                                      the I/O itself. None under the
+        #                                      simulator (modelled duration).
+        self._telemetry_k: int = 0           # in-flight count on the device
+        #                                      at launch (TelemetryHub)
         self.epoch = None                    # learning epoch membership
         self.retries = 0
         self.error: Optional[BaseException] = None

@@ -12,7 +12,9 @@ from __future__ import annotations
 
 from .recorder import (EVENT_SCHEMA, WAIT_STATES, MetricsTimeline,
                        TraceConfig, TraceRecorder)
-from . import perfetto, report
+from .telemetry import (TelemetryHub, apply_tier_config, fit_samples,
+                        fit_tiers)
+from . import compare, perfetto, report
 
 #: When true, every IORuntime constructed enables tracing and registers
 #: its recorder in RUNS (set only by the ``repro.trace`` CLI driver).
@@ -21,6 +23,15 @@ FORCE = False
 #: ``(label, runtime)`` pairs registered while FORCE was on.
 RUNS: list = []
 
+#: Backend-substitution hook (set only by the ``repro.compare`` CLI
+#: driver): a callable ``(cluster, requested_backend) -> Backend | None``
+#: consulted by every IORuntime at construction. Returning a backend
+#: swaps it in (the sim-vs-real harness runs the same unmodified script
+#: once under SimBackend and once under RealBackend(tier_dirs=));
+#: returning None keeps the script's own choice. Capture mode (the lint
+#: hijack) always wins — a static analysis must never execute bodies.
+FORCE_BACKEND = None
+
 
 def register(runtime) -> None:
     RUNS.append((f"runtime-{len(RUNS) + 1}", runtime))
@@ -28,5 +39,7 @@ def register(runtime) -> None:
 
 __all__ = [
     "EVENT_SCHEMA", "WAIT_STATES", "MetricsTimeline", "TraceConfig",
-    "TraceRecorder", "perfetto", "report", "FORCE", "RUNS", "register",
+    "TraceRecorder", "TelemetryHub", "apply_tier_config", "fit_samples",
+    "fit_tiers", "compare", "perfetto", "report", "FORCE", "RUNS",
+    "FORCE_BACKEND", "register",
 ]

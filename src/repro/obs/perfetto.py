@@ -131,6 +131,18 @@ def to_perfetto(recorder) -> dict:
                         "name": f"ckpt:{ev['phase']}",
                         "args": {"step": ev["step"], "mode": ev["mode"],
                                  "n_shards": ev["n_shards"]}})
+        elif et == "telemetry":
+            # measured real-backend throughput as counter tracks on the
+            # device's pid, alongside the modelled bandwidth counters
+            pid = dev_pid(ev["device"], ev["tier"])
+            ts = _us(ev["t"])
+            out.append({"ph": "C", "pid": pid, "tid": 0, "ts": ts,
+                        "name": "measured_mbs",
+                        "args": {"window": ev["mbps"],
+                                 "stream": ev["stream_mbps"]}})
+            out.append({"ph": "C", "pid": pid, "tid": 0, "ts": ts,
+                        "name": "measured_inflight",
+                        "args": {"inflight": ev["inflight"]}})
         elif et == "span":
             span_id += 1
             base = {"pid": 2, "tid": 0, "cat": ev["cat"],

@@ -80,6 +80,14 @@ EVENT_SCHEMA: dict[str, dict[str, tuple]] = {
                  "mode": (str,), "n_shards": (int,)},
     # simulator stuck-path steps (backends.py): kind in {bg_step, fail_step}
     "stall":    {"t": (float,), "kind": (str,)},
+    # measured real-backend throughput (obs/telemetry.py): one sample per
+    # completed I/O op on a device — windowed aggregate MB/s, this op's
+    # effective per-stream rate, queue depth after the completion. Never
+    # appears in sim streams (the simulator has no TelemetryHub).
+    "telemetry": {"t": (float,), "device": (str,),
+                  "tier": (str, type(None)), "mbps": (float, int),
+                  "stream_mbps": (float, int), "inflight": (int,),
+                  "mb": (float, int), "wall_s": (float, int)},
     # generic async span (serve requests etc.): [t, t+dur]
     "span":     {"t": (float,), "name": (str,), "cat": (str,),
                  "dur": (float, int), "args": (dict,)},
@@ -128,11 +136,15 @@ class MetricsTimeline:
                   "background_bw", "available_bw", "used_mb", "reserved_mb",
                   "background_mb", "occupancy_mb", "health")
     SCHED_FIELDS = ("t", "n_ready", "n_running", "blocked_demand_mb")
+    #: measured telemetry is a SEPARATE per-device series (real runs only)
+    #: so the modelled ROW_FIELDS schema above stays frozen
+    TELEMETRY_FIELDS = ("t", "mbps", "stream_mbps", "inflight")
 
     def __init__(self):
         self.devices: dict[str, list[tuple]] = {}
         self.device_tiers: dict[str, Optional[str]] = {}
         self.sched: list[tuple] = []
+        self.telemetry: dict[str, list[tuple]] = {}
 
     def sample_device(self, t: float, dev) -> None:
         rows = self.devices.get(dev.name)
@@ -157,9 +169,18 @@ class MetricsTimeline:
         else:
             self.sched.append(row)
 
+    def sample_telemetry(self, t: float, device: str, mbps: float,
+                         stream_mbps: float, inflight: int) -> None:
+        self.telemetry.setdefault(device, []).append(
+            (t, mbps, stream_mbps, inflight))
+
     def device_rows(self, name: str) -> list[dict]:
         return [dict(zip(self.ROW_FIELDS, r))
                 for r in self.devices.get(name, ())]
+
+    def telemetry_rows(self, name: str) -> list[dict]:
+        return [dict(zip(self.TELEMETRY_FIELDS, r))
+                for r in self.telemetry.get(name, ())]
 
 
 class _Wait:
@@ -409,6 +430,23 @@ class TraceRecorder:
 
     def on_stall(self, t: float, kind: str) -> None:
         self.event("stall", t=t, kind=kind)
+
+    def on_telemetry(self, t: float, device: str, tier: Optional[str],
+                     mbps: float, stream_mbps: float, inflight: int,
+                     mb: float, wall_s: float) -> None:
+        """Measured-throughput sample from the RealBackend's TelemetryHub
+        (one per completed I/O op; real runs only)."""
+        with self._lock:
+            self.events.append({"type": "telemetry", "t": float(t),
+                                "device": device, "tier": tier,
+                                "mbps": float(mbps),
+                                "stream_mbps": float(stream_mbps),
+                                "inflight": int(inflight),
+                                "mb": float(mb), "wall_s": float(wall_s)})
+            if self.config.timeline:
+                self.timeline.sample_telemetry(
+                    t, device, float(mbps), float(stream_mbps),
+                    int(inflight))
 
     def span(self, name: str, cat: str, t0: float, t1: float,
              **args) -> dict:

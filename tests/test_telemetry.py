@@ -1,0 +1,409 @@
+"""Measured-telemetry tests (ISSUE 9): the RealBackend's TelemetryHub,
+the ``rt.stats()["telemetry"]`` gating, frozen-schema ``telemetry``
+events, the scheduler's measured-duration feedback (bugfix: declared
+``task.duration`` used to poison the tuner/drift signal on real runs),
+the tier-fit calibration, the ``repro.compare`` CLI and the bench
+trajectory regression checker."""
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import (Cluster, DriftConfig, IORuntime, RealBackend,
+                        SimBackend, StorageDevice, WorkerNode, constraint,
+                        io, task)
+from repro.core.datalife import DataObject
+from repro.core.scheduler import Scheduler
+from repro.core.task import TaskDef, TaskInstance, TaskType
+from repro.obs import EVENT_SCHEMA, MetricsTimeline, perfetto
+from repro.obs.telemetry import (TelemetryHub, apply_tier_config,
+                                 fit_samples, fit_tiers)
+
+from benchmarks._report import append_history, check_regress, read_history
+
+
+def _fresh_ids():
+    TaskInstance._ids = itertools.count()
+    DataObject._ids = itertools.count()
+
+
+def _two_tier_cluster(io_executors=8):
+    ssd = StorageDevice(name="ssd0", tier="ssd")
+    fs = StorageDevice(name="fs0", bandwidth=300, per_stream_cap=30,
+                       tier="fs")
+    return Cluster(workers=[WorkerNode(name="w0", cpus=2,
+                                       io_executors=io_executors,
+                                       tiers=[ssd, fs])])
+
+
+@io
+@task(returns=1)
+def _put(dirpath, name, mb):
+    """Real ~mb MB write (+fsync) when dirpath is set; pure model in sim."""
+    if not dirpath:
+        return name
+    path = os.path.join(dirpath, name)
+    with open(path, "wb") as f:
+        f.write(b"\0" * int(mb * (1 << 20)))
+        f.flush()
+        os.fsync(f.fileno())
+    return name
+
+
+def _real_run(tmp_path, trace=True, n=4):
+    _fresh_ids()
+    cluster = _two_tier_cluster()
+    tier_dirs = {}
+    for tier in cluster.tier_names():
+        d = tmp_path / tier
+        d.mkdir(exist_ok=True)
+        tier_dirs[tier] = str(d)
+    rt = IORuntime(cluster, backend=RealBackend(tier_dirs=tier_dirs),
+                   trace=trace)
+    with rt:
+        for i in range(n):
+            tier = "ssd" if i % 2 == 0 else "fs"
+            _put(tier_dirs[tier], f"f{i}.bin", 0.5,
+                 io_mb=0.5, storage_tier=tier)
+        rt.barrier(final=True)
+    return rt
+
+
+def _sim_run(trace=True, n=4):
+    _fresh_ids()
+    rt = IORuntime(_two_tier_cluster(), backend=SimBackend(), trace=trace)
+    with rt:
+        for i in range(n):
+            _put("", f"f{i}.bin", 0.5, io_mb=0.5,
+                 storage_tier="ssd" if i % 2 == 0 else "fs")
+        rt.barrier(final=True)
+    return rt
+
+
+# ------------------------------------------------ stats gating + contents
+def test_stats_telemetry_present_iff_real_and_traced(tmp_path):
+    stats = _real_run(tmp_path, trace=True).stats()
+    assert "telemetry" in stats
+    tel = stats["telemetry"]
+    assert tel["window_s"] > 0
+    assert set(tel["devices"]) == {"ssd0", "fs0"}
+    for name, d in tel["devices"].items():
+        assert d["n_ops"] >= 1, name
+        assert d["n_samples"] >= 1, name
+        assert d["inflight"] == 0, name
+        assert d["mbps"] > 0 and d["stream_mbps"] > 0, name
+        assert d["total_mb"] == pytest.approx(0.5 * d["n_ops"])
+    assert tel["devices"]["ssd0"]["tier"] == "ssd"
+    assert tel["devices"]["fs0"]["tier"] == "fs"
+    # untraced real run: hub still measures, but stats stay schema-frozen
+    assert "telemetry" not in _real_run(tmp_path, trace=False).stats()
+    # traced sim run: the simulator has no hub — models, not measurements
+    assert "telemetry" not in _sim_run(trace=True).stats()
+
+
+def test_measured_duration_real_only(tmp_path):
+    real = _real_run(tmp_path, trace=False)
+    done = [t for t in real.scheduler.completed if t.is_io]
+    assert done
+    for t in done:
+        assert t.measured_duration is not None and t.measured_duration > 0
+        # measured covers the successful attempt only; end-to-end duration
+        # also counts pool queueing and argument resolution
+        assert t.measured_duration <= t.duration + 0.25
+    sim = _sim_run(trace=False)
+    assert all(t.measured_duration is None for t in sim.scheduler.completed)
+
+
+# ------------------------------------------------------- event stream shape
+def test_real_telemetry_events_match_frozen_schema(tmp_path):
+    rec = _real_run(tmp_path, trace=True).recorder
+    tel = [ev for ev in rec.events if ev["type"] == "telemetry"]
+    assert len(tel) == 4, "one telemetry event per successful I/O op"
+    for ev in rec.events:
+        et = ev["type"]
+        assert et in EVENT_SCHEMA, f"unknown event type {et!r}"
+        fields = EVENT_SCHEMA[et]
+        for f, types in fields.items():
+            assert f in ev, f"{et} event missing field {f!r}: {ev}"
+            assert isinstance(ev[f], types), \
+                f"{et}.{f} is {type(ev[f]).__name__}: {ev}"
+        extra = set(ev) - set(fields) - {"type"}
+        assert not extra, f"{et} event has undeclared fields {extra}"
+    for ev in tel:
+        assert ev["mb"] == pytest.approx(0.5)
+        assert ev["wall_s"] > 0 and ev["mbps"] > 0
+
+
+def test_timeline_and_perfetto_carry_measured_series(tmp_path):
+    rec = _real_run(tmp_path, trace=True).recorder
+    rows = rec.timeline.telemetry_rows("ssd0")
+    assert rows
+    for row in rows:
+        assert set(row) == set(MetricsTimeline.TELEMETRY_FIELDS)
+    evs = json.loads(perfetto.dumps(rec))["traceEvents"]
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert "measured_mbs" in counters
+    assert "measured_inflight" in counters
+
+
+def test_sim_traces_stay_byte_identical_with_telemetry_wiring():
+    """The hub is real-backend-only: sim event streams carry no telemetry
+    events and stay byte-deterministic run-to-run."""
+    rec1 = _sim_run(trace=True).recorder
+    rec2 = _sim_run(trace=True).recorder
+    assert rec1.to_jsonl() == rec2.to_jsonl()
+    assert perfetto.dumps(rec1) == perfetto.dumps(rec2)
+    assert not any(ev["type"] == "telemetry" for ev in rec1.events)
+
+
+# ------------------------------------------- hub accounting + fit pipeline
+def test_hub_inflight_failed_and_window():
+    hub = TelemetryHub(window_s=5.0)
+    dev = StorageDevice(name="d0", tier="ssd")
+    assert hub.on_launch(0.0, dev) == 1
+    assert hub.on_launch(0.1, dev) == 2
+    hub.on_complete(1.0, dev, 10.0, 1.0, launch_inflight=2)
+    hub.on_complete(1.5, dev, 0.0, None, failed=True, launch_inflight=2)
+    d = hub.summary()["devices"]["d0"]
+    assert d["n_ops"] == 1 and d["n_failed"] == 1
+    assert d["inflight"] == 0
+    assert d["n_samples"] == 1, "failed ops record no throughput sample"
+    assert d["mbps"] == pytest.approx(10.0)       # 10 MB over a 1 s span
+    assert d["stream_mbps"] == pytest.approx(10.0)
+
+
+def test_fit_samples_recovers_congestion_curve():
+    # k=1 streams at 100 MB/s, k=4 still 100 MB/s each (aggregate 400),
+    # k=8 collapses to 40 MB/s each (aggregate 320 < 400: past the knee)
+    samples = [(1.0, 50.0, 0.5, 1), (2.0, 50.0, 0.5, 1),
+               (3.0, 25.0, 0.25, 4), (3.1, 25.0, 0.25, 4),
+               (4.0, 10.0, 0.25, 8), (4.1, 10.0, 0.25, 8)]
+    fit = fit_samples(samples)
+    assert fit["per_stream_cap"] == pytest.approx(100.0)
+    assert fit["bandwidth"] == pytest.approx(400.0)
+    assert fit["max_k"] == 8 and fit["n_samples"] == 6
+    # knee = 400/100 = 4; over = 8-4 = 4; alpha = (400/320 - 1)/4
+    assert fit["congestion_alpha"] == pytest.approx(0.0625)
+    assert fit_samples([(1.0, 0.0, 0.5, 1)]) is None, \
+        "latency-only ops can't constrain a bandwidth model"
+
+
+def test_fit_tiers_and_apply_tier_config():
+    hub = TelemetryHub()
+    dev = StorageDevice(name="d0", tier="ssd")
+    for t in (1.0, 2.0, 3.0):
+        hub.on_launch(t - 0.5, dev)
+        hub.on_complete(t, dev, 50.0, 0.5, launch_inflight=1)
+    cfg = fit_tiers(hub)
+    assert set(cfg) == {"ssd"}
+    assert cfg["ssd"]["per_stream_cap"] == pytest.approx(100.0)
+    cluster = _two_tier_cluster()
+    n = apply_tier_config(cluster, cfg)
+    assert n == 1, "only the ssd tier appears in the fit"
+    ssd = next(d for d in cluster.devices if d.tier == "ssd")
+    fs = next(d for d in cluster.devices if d.tier == "fs")
+    assert ssd.bandwidth == pytest.approx(cfg["ssd"]["bandwidth"])
+    assert ssd.per_stream_cap == pytest.approx(100.0)
+    assert ssd.available_bw == ssd.bandwidth
+    assert ssd.congestion_knee == max(1, int(ssd.bandwidth
+                                             / ssd.per_stream_cap))
+    assert fs.bandwidth == 300, "unlisted tiers keep their parameters"
+
+
+# ------------------------------------- scheduler feedback (the bugfix unit)
+class _StubTuner:
+    def __init__(self):
+        self.observed = []
+        self.completed = []
+
+    def observe(self, constraint, duration):
+        self.observed.append((constraint, duration))
+
+    def on_task_complete(self, duration):
+        self.completed.append(duration)
+
+    def learning(self):
+        return True  # keep the learning node held: no release bookkeeping
+
+
+def _io_task(cluster, measured, declared_end, granted_bw=8.0):
+    defn = TaskDef(fn=lambda: None, name="w", task_type=TaskType.IO)
+    t = TaskInstance(defn, (), {})
+    w = cluster.workers[0]
+    t.worker = w
+    t.device = w.tiers[0]
+    t.granted_bw = granted_bw
+    t.device.allocate(granted_bw)
+    t.start_time = 0.0
+    t.end_time = declared_end
+    t.measured_duration = measured
+    t.tuner_key = "w@ssd"
+    return t
+
+
+def test_on_complete_feeds_measured_wall_time_not_declared_duration():
+    """Bugfix: the drift monitor and the epoch tuner must see the measured
+    attempt wall time when the backend recorded one — task.duration also
+    counts pool queueing and retry backoff."""
+    cluster = _two_tier_cluster()
+    sched = Scheduler(cluster, launch=lambda t, w: None)
+    stub = _StubTuner()
+    sched.tuners["w@ssd"] = stub
+    sched.drift_config = DriftConfig()
+    # drift path: measured 0.25 s wins over the 10 s end-to-end duration
+    t1 = _io_task(cluster, measured=0.25, declared_end=10.0)
+    sched.on_complete(t1)
+    assert stub.observed == [(8.0, 0.25)]
+    # epoch path: same preference for the measured signal
+    t2 = _io_task(cluster, measured=0.5, declared_end=10.0)
+    t2.epoch = object()
+    sched.on_complete(t2)
+    assert stub.completed == [0.5]
+    # sim fallback: no measurement recorded -> the modelled duration feeds
+    # through unchanged (bit-identical golden logs depend on this)
+    t3 = _io_task(cluster, measured=None, declared_end=10.0)
+    sched.on_complete(t3)
+    assert stub.observed[-1] == (8.0, 10.0)
+
+
+@pytest.mark.slow
+def test_drift_recalibrates_from_measured_real_durations(tmp_path):
+    """End-to-end: an auto-tuned signature learns a fast curve from warm
+    tasks, then the real workload slows 10-20x — the measured wall times
+    feed AutoTuner.observe and trigger a recalibration."""
+    _fresh_ids()
+
+    @constraint(storageBW="auto(100,100,2)")
+    @io
+    @task(returns=1)
+    def probe(dt):
+        time.sleep(dt)
+        return dt
+
+    ssd = StorageDevice(name="ssd0", bandwidth=200, per_stream_cap=100,
+                        tier="ssd")
+    cluster = Cluster(workers=[WorkerNode(name="w0", cpus=2,
+                                          io_executors=4, tiers=[ssd])])
+    rt = IORuntime(cluster, backend=RealBackend(),
+                   drift=DriftConfig(window=4, min_observations=3,
+                                     threshold=2.0))
+    with rt:
+        warm = [probe(0.004, io_mb=0.0) for _ in range(2)]
+        rt.wait_on(*warm)          # learning epoch (k=2) concludes here
+        for _ in range(6):
+            probe(0.08, io_mb=0.0)
+        rt.barrier(final=True)
+    tuners = list(rt.scheduler.tuners.values())
+    assert len(tuners) == 1
+    assert tuners[0].n_recalibrations >= 1
+    assert tuners[0].summary()["drift_window"]["n_obs"] >= 0
+
+
+# ---------------------------------------------------------------------- CLI
+def test_compare_cli_smoke(tmp_path):
+    script = tmp_path / "tiny.py"
+    out_dir = tmp_path / "payload"
+    out_dir.mkdir()
+    script.write_text(
+        "import os\n"
+        "from repro.core import (Cluster, IORuntime, SimBackend,\n"
+        "                        StorageDevice, WorkerNode, io, task)\n"
+        "@io\n"
+        "@task(returns=1)\n"
+        "def put(dirpath, name, mb):\n"
+        "    if dirpath:\n"
+        "        p = os.path.join(dirpath, name)\n"
+        "        with open(p, 'wb') as f:\n"
+        "            f.write(b'x' * int(mb * (1 << 20)))\n"
+        "            f.flush()\n"
+        "            os.fsync(f.fileno())\n"
+        "    return name\n"
+        "dev = StorageDevice(name='d0', tier='ssd')\n"
+        "cluster = Cluster(workers=[WorkerNode(name='w0', cpus=1,\n"
+        "                                      io_executors=4,\n"
+        "                                      tiers=[dev])])\n"
+        f"out = {str(out_dir)!r}\n"
+        "with IORuntime(cluster, backend=SimBackend()) as rt:\n"
+        "    for i in range(3):\n"
+        "        put(out, f'f{i}.bin', 0.25, io_mb=0.25,\n"
+        "            storage_tier='ssd')\n"
+        "    rt.barrier(final=True)\n")
+    fit = tmp_path / "fit.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.compare", str(script),
+         "--tier-base", str(tmp_path / "tiers"), "--fit", str(fit),
+         "--json"],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    doc = json.loads(proc.stdout)
+    assert len(doc) == 1
+    rep = doc[0]["report"]
+    assert rep["n_pairs"] == 3
+    assert rep["median_abs_rel_error"] is not None
+    assert "report_fitted" in doc[0], "--fit must re-run the sim leg"
+    assert doc[0]["tier_fit"]["ssd"]["fitted"] is not None
+    fitted = json.loads(fit.read_text())
+    assert fitted["tiers"]["ssd"]["bandwidth"] > 0
+
+
+def test_compare_cli_missing_file_exits_2():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.compare", "/no/such/script.py"],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 2
+
+
+# ------------------------------------------------------ bench trajectory
+def test_history_append_read_and_torn_lines(tmp_path):
+    hist = tmp_path / "BENCH_history.jsonl"
+    append_history(str(hist), bench="b", metric="m", value=1.0)
+    append_history(str(hist), bench="b", metric="m", value=2.0,
+                   direction="max", seed=7)
+    with open(hist, "a") as f:
+        f.write('{"torn": ')  # killed writer: unparsable last line
+    entries = read_history(str(hist))
+    assert [e["value"] for e in entries] == [1.0, 2.0]
+    assert entries[1]["direction"] == "max" and entries[1]["seed"] == 7
+    with pytest.raises(ValueError):
+        append_history(str(hist), bench="b", metric="m", value=0.0,
+                       direction="sideways")
+
+
+def test_check_regress_directions(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    # min-direction metric: 1.5 vs median(1.0, 1.0) = +50% -> regressed
+    for v in (1.0, 1.0, 1.5):
+        append_history(str(hist), bench="sched", metric="seconds", value=v)
+    # min-direction within tolerance: +10% < 15% -> ok
+    for v in (1.0, 1.0, 1.1):
+        append_history(str(hist), bench="sched", metric="other", value=v)
+    # max-direction metric: 50 vs median(100, 100) = -50% -> regressed
+    for v in (100.0, 100.0, 50.0):
+        append_history(str(hist), bench="serve", metric="tput", value=v,
+                       direction="max")
+    # single entry: no trajectory, skipped
+    append_history(str(hist), bench="solo", metric="x", value=1.0)
+    findings = {(f["bench"], f["metric"]): f
+                for f in check_regress(str(hist), threshold=0.15)}
+    assert findings[("sched", "seconds")]["regressed"] is True
+    assert findings[("sched", "seconds")]["baseline"] == pytest.approx(1.0)
+    assert findings[("sched", "other")]["regressed"] is False
+    assert findings[("serve", "tput")]["regressed"] is True
+    assert ("solo", "x") not in findings
+
+
+def test_run_check_regress_exit_codes(tmp_path):
+    hist = tmp_path / "h.jsonl"
+    cmd = [sys.executable, "-m", "benchmarks.run", "--check-regress",
+           "--history", str(hist)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr  # no trajectory: nothing to do
+    for v in (1.0, 1.0, 5.0):
+        append_history(str(hist), bench="b", metric="m", value=v)
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 1
+    assert "REGRESSED" in proc.stdout
