@@ -15,14 +15,35 @@ Two claims, one JSON:
   deadline; if it blows through the deadline the recorded speedup is the
   proven lower bound.
 
+ISSUE 10 additions (sharded control plane, docs/scale.md):
+
+* ``--shards N`` runs the same workload through the ShardedScheduler with
+  per-chain ``shard_key`` anchors and records the sharded wall clock —
+  the 1M-task < 60 s headline run is
+  ``--n-tasks 1000000 --shards 4 --check-regress`` (``--check-regress``
+  exits non-zero when the sharded leg misses ``--deadline``, default 60 s).
+  The seed comparison is skipped above ``--seed-max-n`` (the O(ready^2)
+  seed would need hours there; the 100k default already proves the bound).
+* **Traced-overhead pin** — the memoized blocked-head diagnosis keeps a
+  traced run within ``TRACED_RATIO_MAX`` x of the untraced wall clock on
+  the same workload (before memoization a traced contended run re-walked
+  every worker per round); asserted on every invocation.
+* ``--parity --shards N`` runs the symmetric lockstep DAG (full-worker
+  compute chains + locality-anchored checkpoints) at shards 1 and N and
+  asserts bit-identical launch logs — the CI 2-shard golden-parity smoke.
+
 Usage::
 
     PYTHONPATH=src python -m benchmarks.sched_scale \
-        [--n 100000] [--golden-n 1000] [--out BENCH_sched_scale.json]
+        [--n-tasks 100000] [--golden-n 1000] [--shards 1] \
+        [--check-regress] [--deadline 60] [--parity] \
+        [--out BENCH_sched_scale.json]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import gc
 import itertools
 import time
 
@@ -35,11 +56,36 @@ from ._seed_impl import SeedScheduler, SeedSimBackend
 
 GOLDEN_N = 1_000
 LARGE_N = 100_000
+TRACED_N = 20_000          # workload for the traced-overhead pin
+TRACED_RATIO_MAX = 5.0     # traced wall clock may cost at most this factor
+SEED_MAX_N = 200_000       # beyond this the seed comparison is skipped
 
 
 def _reset_ids() -> None:
     """Fresh tid space so launch logs from separate runs are comparable."""
     TaskInstance._ids = itertools.count()
+
+
+@contextlib.contextmanager
+def _gc_quiesced():
+    """Suspend CPython's cyclic collector for a timed leg.
+
+    The launch log and completed-task list keep every task object alive
+    for the whole run, so each gen-2 collection rescans an ever-growing
+    heap for garbage it can never find — at 1M tasks that is ~15 s of
+    pure rescan overhead growing superlinearly with n. Plain refcounting
+    frees everything those logs don't hold; the ``collect()`` on exit
+    reclaims the task<->future cycles once the leg is over. Applied
+    identically to seed and rewrite legs, so speedups stay comparable.
+    """
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+            gc.collect()
 
 
 def _make_cluster() -> Cluster:
@@ -49,13 +95,21 @@ def _make_cluster() -> Cluster:
 
 
 def run_workload(n_tasks: int, scheduler_cls=Scheduler, backend=None,
-                 trace=False):
+                 trace=False, shards: int = 1, n_workers: int = 0):
     """Mixed compute/I/O workload: compute stages feeding static- and
     auto-constrained checkpoints (deterministic durations/sizes).
     ``trace=True`` wires an obs TraceRecorder (the determinism tests use
-    this to pin that tracing never perturbs the launch log)."""
+    this to pin that tracing never perturbs the launch log).
+    ``shards > 1`` runs the sharded control plane with per-chain
+    ``shard_key`` anchors (shards == 1 passes no shard kwargs at all, so
+    the golden comparison workload stays byte-identical to the seed's)."""
     _reset_ids()
-    cluster = _make_cluster()
+    # n_workers=0 keeps the canonical 4-worker golden cluster; the sharded
+    # scale leg passes a wider cluster so each shard owns a BLOCK of
+    # workers (the scale-out shape the control plane is for) rather than
+    # a single worker per shard
+    cluster = _make_cluster() if not n_workers else \
+        Cluster.make(n_workers=n_workers, cpus=8, io_executors=32)
     backend = backend or SimBackend()
 
     @task(returns=1)
@@ -75,14 +129,56 @@ def run_workload(n_tasks: int, scheduler_cls=Scheduler, backend=None,
         pass
 
     t0 = time.perf_counter()
-    with IORuntime(cluster, backend=backend,
-                   scheduler_cls=scheduler_cls, trace=trace) as rt:
+    with _gc_quiesced(), IORuntime(cluster, backend=backend,
+                                   scheduler_cls=scheduler_cls, trace=trace,
+                                   shards=shards) as rt:
         for i in range(n_tasks // 2):
-            r = stage(i, duration=1.0 + (i % 7) * 0.25)
-            if i % 3 == 2:
-                ck_auto(r, i, io_mb=40.0)
+            if shards > 1:
+                r = stage(i, duration=1.0 + (i % 7) * 0.25, shard_key=i)
+                if i % 3 == 2:
+                    ck_auto(r, i, io_mb=40.0, shard_key=i)
+                else:
+                    ck_static(r, i, io_mb=40.0, shard_key=i)
             else:
-                ck_static(r, i, io_mb=40.0)
+                r = stage(i, duration=1.0 + (i % 7) * 0.25)
+                if i % 3 == 2:
+                    ck_auto(r, i, io_mb=40.0)
+                else:
+                    ck_static(r, i, io_mb=40.0)
+        rt.barrier(final=True)
+        elapsed = time.perf_counter() - t0
+        return rt.scheduler.launch_log, rt.stats(), elapsed
+
+
+def run_symmetric(n_chains: int, depth: int, shards: int = 1,
+                  n_workers: int = 4):
+    """Symmetric lockstep DAG for shard-count parity: full-worker compute
+    chains (uniform durations) feeding locality-placed static checkpoints,
+    each chain anchored by its own ``shard_key``. On this workload the
+    shard-confined placement IS the global first-fit placement, so launch
+    logs are bit-identical across shard counts (docs/scale.md)."""
+    _reset_ids()
+    cluster = Cluster.make(n_workers=n_workers, cpus=8, io_executors=32)
+    cluster.shared_workdir = False  # I/O follows producer locality
+
+    @constraint(computingUnits=8)
+    @task(returns=1)
+    def stage(x, i):
+        pass
+
+    @constraint(storageBW=8)
+    @io
+    @task()
+    def ck(x, i):
+        pass
+
+    t0 = time.perf_counter()
+    with _gc_quiesced(), IORuntime(cluster, shards=shards) as rt:
+        futs = [0] * n_chains
+        for _ in range(depth):
+            for i in range(n_chains):
+                futs[i] = stage(futs[i], i, duration=1.0, shard_key=i)
+                ck(futs[i], i, io_mb=40.0, shard_key=i)
         rt.barrier(final=True)
         elapsed = time.perf_counter() - t0
         return rt.scheduler.launch_log, rt.stats(), elapsed
@@ -128,8 +224,19 @@ def golden_compare(n_tasks: int = GOLDEN_N) -> dict:
     }
 
 
-def scale_run(n_tasks: int = LARGE_N, seed_deadline_factor: float = 30.0) -> dict:
+def scale_run(n_tasks: int = LARGE_N, seed_deadline_factor: float = 30.0,
+              with_seed: bool = True) -> dict:
     new_log, new_stats, new_s = run_workload(n_tasks)
+    out = {
+        "n_tasks": n_tasks,
+        "n_launched": len(new_log),
+        "makespan": new_stats["makespan"],
+        "new_seconds": new_s,
+    }
+    if not with_seed:
+        out.update(seed_seconds=None, seed_timed_out=None, speedup=None,
+                   speedup_is_lower_bound=None)
+        return out
     deadline = max(60.0, seed_deadline_factor * new_s)
     seed_timed_out = False
     t0 = time.perf_counter()
@@ -143,39 +250,148 @@ def scale_run(n_tasks: int = LARGE_N, seed_deadline_factor: float = 30.0) -> dic
     else:
         assert seed_log == new_log, "100k launch logs diverged"
         assert _normalize_stats(seed_stats) == _normalize_stats(new_stats)
+    out.update(seed_seconds=seed_s, seed_timed_out=seed_timed_out,
+               speedup=seed_s / new_s, speedup_is_lower_bound=seed_timed_out)
+    return out
+
+
+def shard_scale_run(n_tasks: int, shards: int,
+                    workers_per_shard: int = 4) -> dict:
+    """The sharded leg: same workload, shard_key-anchored chains, N-shard
+    control plane over a cluster where each shard owns a block of
+    ``workers_per_shard`` workers (the scale-out shape sharding models —
+    one worker per shard would measure confinement, not the control
+    plane). Reports wall clock plus the control-plane rollup (bus
+    counters, lease invariant check)."""
+    n_workers = shards * workers_per_shard
+    log, stats, new_s = run_workload(n_tasks, shards=shards,
+                                     n_workers=n_workers)
+    sh = stats.get("shards", {})
+    violations = sh.get("lease_violations", [])
+    assert not violations, f"lease invariants violated: {violations}"
     return {
         "n_tasks": n_tasks,
-        "n_launched": len(new_log),
-        "makespan": new_stats["makespan"],
+        "shards": shards,
+        "n_workers": n_workers,
+        "n_launched": len(log),
+        "makespan": stats["makespan"],
         "new_seconds": new_s,
-        "seed_seconds": seed_s,
-        "seed_timed_out": seed_timed_out,
-        "speedup": seed_s / new_s,
-        "speedup_is_lower_bound": seed_timed_out,
+        "bus": sh.get("bus"),
+        "cross_shard_edges": sh.get("cross_shard_edges"),
+        "local_edges": sh.get("local_edges"),
     }
+
+
+def traced_overhead(n_tasks: int = TRACED_N) -> dict:
+    """Traced-vs-untraced pin for the memoized blocked-head diagnosis: a
+    traced run of the contended workload must stay within
+    ``TRACED_RATIO_MAX`` x of the untraced wall clock, and tracing must
+    not perturb the launch log."""
+    log_plain, _, plain_s = run_workload(n_tasks)
+    log_traced, _, traced_s = run_workload(n_tasks, trace=True)
+    assert log_traced == log_plain, "tracing perturbed the launch log"
+    ratio = traced_s / plain_s if plain_s > 0 else float("inf")
+    assert ratio <= TRACED_RATIO_MAX, (
+        f"traced run cost {ratio:.1f}x the untraced wall clock at "
+        f"{n_tasks} tasks (budget {TRACED_RATIO_MAX}x) — blocked-head "
+        f"diagnosis memoization regressed (scheduler._diagnose_block)")
+    return {"n_tasks": n_tasks, "untraced_seconds": plain_s,
+            "traced_seconds": traced_s, "ratio": ratio,
+            "budget": TRACED_RATIO_MAX}
+
+
+def shard_parity(shards: int, n_chains: int = 16, depth: int = 5) -> dict:
+    """CI golden-parity smoke: the symmetric lockstep DAG must produce the
+    same launch log at 1 shard and at ``shards`` shards."""
+    log1, stats1, _ = run_symmetric(n_chains, depth, shards=1)
+    logn, statsn, _ = run_symmetric(n_chains, depth, shards=shards)
+    if log1 != logn:
+        diff = next(((i, a, b) for i, (a, b)
+                     in enumerate(zip(log1, logn)) if a != b),
+                    "one log is a prefix of the other")
+        raise AssertionError(
+            f"shard parity broken at shards={shards}: first divergence "
+            f"{diff} (lens {len(log1)}/{len(logn)})")
+    assert stats1["makespan"] == statsn["makespan"]
+    return {"shards": shards, "n_launched": len(log1),
+            "identical_launch_log": True, "makespan": stats1["makespan"]}
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=LARGE_N)
+    ap.add_argument("--n", "--n-tasks", dest="n", type=int, default=LARGE_N)
     ap.add_argument("--golden-n", type=int, default=GOLDEN_N)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--check-regress", action="store_true",
+                    help="exit non-zero when the (sharded) scale leg "
+                         "misses --deadline seconds of wall clock")
+    ap.add_argument("--deadline", type=float, default=60.0)
+    ap.add_argument("--parity", action="store_true",
+                    help="only run the symmetric shard-parity smoke "
+                         "(CI fast tier)")
     ap.add_argument("--out", default="BENCH_sched_scale.json")
     args = ap.parse_args(argv)
 
+    if args.parity:
+        shards = args.shards if args.shards > 1 else 2
+        parity = shard_parity(shards)
+        print(f"parity @ shards={shards}: {parity['n_launched']} launches "
+              f"bit-identical to shards=1 (makespan {parity['makespan']})")
+        report = write_report(
+            args.out, {"parity": parity}, bench="sched_scale_parity",
+            config={"shards": shards},
+            headline_metric=("parity_n_launched", parity["n_launched"],
+                             "max"))
+        print(f"wrote {args.out}")
+        return report
+
+    # the sharded headline leg runs FIRST: wall-clock at the 1M scale is
+    # sensitive to allocator/heap history, and the deadline-checked leg
+    # deserves the fresh heap rather than one fragmented by the golden,
+    # traced and unsharded legs that precede it logically
+    shard = None
+    if args.shards > 1:
+        shard = shard_scale_run(args.n, args.shards)
+        print(f"sharded @ {args.n} x {args.shards} shards: "
+              f"{shard['new_seconds']:.2f}s "
+              f"(cross-shard edges {shard['cross_shard_edges']})")
     golden = golden_compare(args.golden_n)
     print(f"golden @ {args.golden_n}: launch_log + stats identical "
           f"(seed {golden['seed_seconds']:.2f}s, new {golden['new_seconds']:.2f}s)")
-    scale = scale_run(args.n)
-    tag = ">=" if scale["speedup_is_lower_bound"] else "="
-    print(f"scale @ {args.n}: new {scale['new_seconds']:.2f}s, "
-          f"seed {scale['seed_seconds']:.2f}s"
-          f"{' (timed out)' if scale['seed_timed_out'] else ''} "
-          f"-> speedup {tag} {scale['speedup']:.1f}x")
+    traced = traced_overhead()
+    print(f"traced overhead @ {traced['n_tasks']}: "
+          f"{traced['ratio']:.2f}x (budget {TRACED_RATIO_MAX}x)")
+    with_seed = args.n <= SEED_MAX_N
+    scale = scale_run(args.n, with_seed=with_seed)
+    if with_seed:
+        tag = ">=" if scale["speedup_is_lower_bound"] else "="
+        print(f"scale @ {args.n}: new {scale['new_seconds']:.2f}s, "
+              f"seed {scale['seed_seconds']:.2f}s"
+              f"{' (timed out)' if scale['seed_timed_out'] else ''} "
+              f"-> speedup {tag} {scale['speedup']:.1f}x")
+    else:
+        print(f"scale @ {args.n}: new {scale['new_seconds']:.2f}s "
+              f"(seed comparison skipped above {SEED_MAX_N})")
+    results = {"golden": golden, "scale": scale, "traced": traced}
+    headline = ("scale_new_seconds", scale["new_seconds"], "min")
+    if shard is not None:
+        results["shard_scale"] = shard
+        headline = ("shard_scale_new_seconds", shard["new_seconds"], "min")
     report = write_report(
-        args.out, {"golden": golden, "scale": scale}, bench="sched_scale",
-        config={"n": args.n, "golden_n": args.golden_n},
-        headline_metric=("scale_new_seconds", scale["new_seconds"], "min"))
+        args.out, results, bench="sched_scale",
+        config={"n": args.n, "golden_n": args.golden_n,
+                "shards": args.shards},
+        headline_metric=headline)
     print(f"wrote {args.out}")
+    if args.check_regress:
+        budget_leg = results.get("shard_scale", scale)
+        if budget_leg["new_seconds"] > args.deadline:
+            raise SystemExit(
+                f"REGRESSION: scale leg took "
+                f"{budget_leg['new_seconds']:.2f}s "
+                f"> deadline {args.deadline:.0f}s")
+        print(f"check-regress: {budget_leg['new_seconds']:.2f}s "
+              f"<= {args.deadline:.0f}s deadline")
     return report
 
 

@@ -112,9 +112,24 @@ class SimBackend(Backend):
         self._launch_seq = itertools.count()                # seed-order pop ties
         self._dev_tasks: dict[int, tuple] = {}   # id(dev) -> (dev, set[tid])
         self._dev_epoch_seen: dict[int, int] = {}  # id(dev) -> release_epoch
+        # sharded control plane (core.shardplane): one event heap per shard,
+        # batch-scanned per event step so each shard's queue stays short.
+        # bind() splits the heaps when the runtime's scheduler is sharded;
+        # unsharded, _heaps[0] IS _heap (the same list object) and every
+        # push/scan/pop runs the exact arithmetic above — launch logs stay
+        # bit-identical.
+        self._heaps: list[list] = [self._heap]
+        self._tid_shard: Optional[dict[int, int]] = None  # tid -> shard
 
     def now(self) -> float:
         return self.clock
+
+    def bind(self, runtime) -> None:
+        super().bind(runtime)
+        n = getattr(runtime.scheduler, "n_shards", 1)
+        if n > 1:
+            self._heaps = [[] for _ in range(n)]
+            self._tid_shard = {}
 
     def attach_interference(self, engine) -> None:
         """Bind an InterferenceEngine: burst boundaries become simulation
@@ -141,7 +156,9 @@ class SimBackend(Backend):
     def _push_entry(self, tid: int, est: float) -> None:
         ver = self._entry_ver.get(tid, 0) + 1
         self._entry_ver[tid] = ver
-        heapq.heappush(self._heap, (est, next(self._push_seq), tid, ver))
+        heap = self._heap if self._tid_shard is None \
+            else self._heaps[self._tid_shard[tid]]
+        heapq.heappush(heap, (est, next(self._push_seq), tid, ver))
 
     def _true_finish(self, rec: list) -> float:
         task, rem, min_end = rec
@@ -167,12 +184,40 @@ class SimBackend(Backend):
             if self._dev_epoch_seen.get(dev_id) == dev.release_epoch:
                 continue
             self._dev_epoch_seen[dev_id] = dev.release_epoch
+            # one rate per device (all its tasks share the fair-share rate);
+            # same arithmetic as _true_finish, hoisted out of the tid loop.
+            # _push_entry is inlined below — this loop re-keys every task
+            # of every stale device and is the single largest source of
+            # heap pushes at the 1M-task bench scale
+            rate = per_task_rate(dev, dev.active_io + dev.background_streams)
+            clock = self.clock
+            io = self._io
+            ver_map = self._entry_ver
+            push_seq = self._push_seq
+            tid_shard = self._tid_shard
+            heaps = self._heaps
+            heappush = heapq.heappush
+            inf = float("inf")
             for tid in tids:
-                self._push_entry(tid, self._true_finish(self._io[tid]))
+                if rate > 0:
+                    rec = io[tid]
+                    est = clock + rec[1] / rate
+                    min_end = rec[2]
+                    if est < min_end:
+                        est = min_end
+                else:
+                    est = inf
+                ver = ver_map.get(tid, 0) + 1
+                ver_map[tid] = ver
+                heap = heaps[0] if tid_shard is None \
+                    else heaps[tid_shard[tid]]
+                heappush(heap, (est, next(push_seq), tid, ver))
 
     def launch(self, task: TaskInstance, worker) -> None:
         task.start_time = self.clock
         task._sim_seq = next(self._launch_seq)
+        if self._tid_shard is not None:
+            self._tid_shard[task.tid] = task.shard
         if self.sanitizer is not None:
             self.sanitizer.record(
                 "launch", t=self.clock, tid=task.tid,
@@ -203,9 +248,25 @@ class SimBackend(Backend):
             self._push_entry(task.tid, self._true_finish(rec))
 
     def _next_event_time(self) -> float:
-        heap, ver = self._heap, self._entry_ver
+        best = float("inf")
+        for heap in self._heaps:
+            t = self._scan_heap(heap)
+            if t < best:
+                best = t
+        return best
+
+    def _scan_heap(self, heap: list) -> float:
+        """Exact next event time within one shard's heap (the whole queue,
+        unsharded). The global next event is the min across shards — each
+        scan pops candidates within ``_GUARD`` of its own best, recomputes
+        their true finish at the current clock, and re-pushes."""
+        ver = self._entry_ver
         best = float("inf")
         repush = []
+        # same once-per-device rate cache as _advance_to: the scan is pure
+        # reads, so every candidate on one device sees one fair-share rate
+        rates: dict[int, float] = {}
+        clock = self.clock
         while heap:
             est, _, tid, v = heap[0]
             if est > best + self._GUARD:
@@ -216,7 +277,16 @@ class SimBackend(Backend):
             if tid in self._compute:
                 true = self._compute[tid][1]
             elif tid in self._io:
-                true = self._true_finish(self._io[tid])
+                task, rem, min_end = self._io[tid]
+                dev = task.device or task.worker.storage
+                key = id(dev)
+                rate = rates.get(key)
+                if rate is None:
+                    rate = rates[key] = per_task_rate(
+                        dev, dev.active_io + dev.background_streams)
+                # inlined _true_finish with the cached rate
+                eta = clock + rem / rate if rate > 0 else float("inf")
+                true = eta if eta > min_end else min_end
             else:
                 continue
             if true < best:
@@ -240,10 +310,19 @@ class SimBackend(Backend):
         if io_active and comp_active:
             self.overlap_time += dt
         interval_mb = 0.0
+        # per-device fair-share rate, computed once per event instead of
+        # once per in-flight record: device stream counts are constant for
+        # the whole interval, so the cached float is the exact value
+        # per_task_rate would return for every record on that device
+        rates: dict[int, float] = {}
         for rec in self._io.values():
             task, rem, _ = rec
             dev = task.device or task.worker.storage
-            rate = per_task_rate(dev, dev.active_io + dev.background_streams)
+            key = id(dev)
+            rate = rates.get(key)
+            if rate is None:
+                rate = rates[key] = per_task_rate(
+                    dev, dev.active_io + dev.background_streams)
             moved = min(rem, rate * dt)
             rec[1] = rem - moved
             dev.bytes_written += moved
@@ -260,16 +339,36 @@ class SimBackend(Backend):
     def _finish_io(self, tid: int) -> TaskInstance:
         task, _, _ = self._io.pop(tid)
         self._entry_ver.pop(tid, None)
+        if self._tid_shard is not None:
+            self._tid_shard.pop(tid, None)
         dev = task.device or task.worker.storage
         self._dev_tasks[id(dev)][1].discard(tid)
         return task
 
     def _pop_due(self) -> list[TaskInstance]:
-        heap, ver = self._heap, self._entry_ver
         due_c: list[TaskInstance] = []
         due_io: list[TaskInstance] = []
         repush: list[tuple[int, float]] = []
         horizon = self.clock + _EPS
+        for heap in self._heaps:
+            self._pop_due_heap(heap, horizon, due_c, due_io, repush)
+        # re-push AFTER draining the horizon: a tightened estimate can land
+        # back inside it (fast devices: rem in MB vs horizon in seconds) and
+        # re-pushing inside the loop would pop it again forever
+        for tid, est in repush:
+            self._push_entry(tid, est)
+        # the seed popped compute tasks then I/O tasks, each in launch order
+        # (the per-shard batches merge into the same global order: _sim_seq
+        # is assigned from one counter at launch)
+        due_c.sort(key=lambda t: t._sim_seq)
+        due_io.sort(key=lambda t: t._sim_seq)
+        return due_c + due_io
+
+    def _pop_due_heap(self, heap: list, horizon: float,
+                      due_c: list, due_io: list, repush: list) -> None:
+        """Drain one shard's heap up to ``horizon`` into the shared due
+        batches (the whole event queue, unsharded)."""
+        ver = self._entry_ver
         while heap and heap[0][0] <= horizon:
             _, _, tid, v = heapq.heappop(heap)
             if ver.get(tid) != v:
@@ -279,6 +378,8 @@ class SimBackend(Backend):
                 if end <= horizon:
                     del self._compute[tid]
                     del ver[tid]
+                    if self._tid_shard is not None:
+                        self._tid_shard.pop(tid, None)
                     due_c.append(task)
                 else:  # defensive: estimate undershot the fixed end
                     repush.append((tid, end))
@@ -288,15 +389,6 @@ class SimBackend(Backend):
                     due_io.append(self._finish_io(tid))
                 else:  # estimate was early (device gained streams): tighten
                     repush.append((tid, self._true_finish(rec)))
-        # re-push AFTER draining the horizon: a tightened estimate can land
-        # back inside it (fast devices: rem in MB vs horizon in seconds) and
-        # re-pushing inside the loop would pop it again forever
-        for tid, est in repush:
-            self._push_entry(tid, est)
-        # the seed popped compute tasks then I/O tasks, each in launch order
-        due_c.sort(key=lambda t: t._sim_seq)
-        due_io.sort(key=lambda t: t._sim_seq)
-        return due_c + due_io
 
     # ------------------------------------------------------ failure domains
     def _fail_attempt(self, task: TaskInstance, error: BaseException) -> bool:

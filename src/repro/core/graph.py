@@ -45,7 +45,7 @@ def bind_args(task: "TaskInstance") -> list:
     return list(zip(names, task.args)) + list(task.kwargs.items())
 
 
-def compute_deps(task: "TaskInstance") -> dict:
+def compute_deps(task: "TaskInstance", pairs=None) -> dict:
     """Predecessor detection WITHOUT mutating any DataHandle bookkeeping:
     maps each predecessor TaskInstance to True for a *data* edge
     (read-after-write / write-after-write) or False for an *anti* edge
@@ -56,9 +56,12 @@ def compute_deps(task: "TaskInstance") -> dict:
     (repro.analysis.capture) calls this directly to record the full
     happens-before relation — including edges to already-DONE producers,
     which ``add`` elides as satisfied.
+
+    ``pairs`` optionally carries a precomputed :func:`bind_args` result so
+    a caller running both passes binds the arguments once.
     """
     deps: dict = {}  # predecessor TaskInstance -> is_data
-    for pname, arg in bind_args(task):
+    for pname, arg in (bind_args(task) if pairs is None else pairs):
         if isinstance(arg, DataHandle):
             direction = task.defn.param_dirs.get(pname, Direction.IN)
             if direction == Direction.IN:
@@ -78,11 +81,12 @@ def compute_deps(task: "TaskInstance") -> dict:
     return deps
 
 
-def apply_handle_effects(task: "TaskInstance") -> None:
+def apply_handle_effects(task: "TaskInstance", pairs=None) -> None:
     """Second pass of dependency detection: record this task against every
     DataHandle argument (reader lists, version bumps, last-writer) in the
-    same binding order the one-pass implementation used."""
-    for pname, arg in bind_args(task):
+    same binding order the one-pass implementation used. ``pairs`` as in
+    :func:`compute_deps`."""
+    for pname, arg in (bind_args(task) if pairs is None else pairs):
         if not isinstance(arg, DataHandle):
             continue
         direction = task.defn.param_dirs.get(pname, Direction.IN)
@@ -99,6 +103,14 @@ class TaskGraph:
         self.tasks: dict[int, TaskInstance] = {}
         self.unfinished: int = 0
         self._missing_deps: dict[int, int] = {}  # tid -> #unfinished deps
+        # sharded control plane (core.shardplane): when the runtime routes
+        # tasks to shards it flips track_shards so every edge is classified
+        # at add() time — cross-shard edges are the dependency messages the
+        # ShardBus will carry (already-DONE producers included: the edge
+        # crossed the boundary even if it never blocked anything)
+        self.track_shards = False
+        self.cross_shard_edges = 0
+        self.local_edges = 0
 
     def add(self, task: TaskInstance) -> bool:
         """Register a task; returns True if it is immediately ready.
@@ -109,8 +121,16 @@ class TaskGraph:
         to be out of the way, so a FAILED/cancelled predecessor satisfies
         them instead of propagating the failure.
         """
-        deps = compute_deps(task)  # dep -> is_data (data wins)
-        apply_handle_effects(task)
+        pairs = bind_args(task)  # bound once, shared by both passes
+        deps = compute_deps(task, pairs)  # dep -> is_data (data wins)
+        apply_handle_effects(task, pairs)
+        if self.track_shards:
+            shard = task.shard
+            for d in deps:
+                if d.shard == shard:
+                    self.local_edges += 1
+                else:
+                    self.cross_shard_edges += 1
 
         task.deps = set()
         task.anti_deps = set()

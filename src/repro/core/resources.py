@@ -94,6 +94,18 @@ class StorageDevice:
         self.health: str = "healthy"
         self.bw_factor: float = 1.0      # effective-bandwidth fraction
         #                                  while degraded (1.0 otherwise)
+        # memoized per-task-rate curve (storage_model.per_task_rate):
+        # k -> MB/s, valid while calibration and health are unchanged
+        self._rate_cache: dict = {}
+
+    def invalidate_rates(self) -> None:
+        """Drop the memoized T(k) curve. Must be called after any mutation
+        of the congestion calibration (bandwidth, per_stream_cap, alpha,
+        beta, knee — see obs.telemetry.apply_tier_config) or of the health
+        state; population changes (active_io, background_streams) need no
+        invalidation because they are the ``k`` argument, not cached
+        state."""
+        self._rate_cache.clear()
 
     # -- failure-domain health (failures.py) ---------------------------------
     @property
@@ -118,6 +130,7 @@ class StorageDevice:
         else:
             self.bw_factor = 1.0
         self.health = state
+        self.invalidate_rates()
         self.rate_epoch += 1
         self.release_epoch += 1
 
@@ -316,6 +329,7 @@ class StorageDevice:
         self.available_bw = self.bandwidth
         self.active_io = 0
         self.bytes_written = 0.0
+        self.invalidate_rates()
         self.rate_epoch += 1
         self.release_epoch += 1
         self.used_mb = 0.0

@@ -92,6 +92,13 @@ class Scheduler:
         self._ready_count = 0
         self._sig_ready: dict[str, int] = {}   # signature -> #ready (O(1))
         self._ready_seq = itertools.count()    # global readiness order
+        # refusal epoch: one tick per dirty wake-up (completion, retry,
+        # readiness, health/burst pokes). Blocked-head diagnoses are
+        # memoized per (class, head, epoch) so a traced run scans each
+        # blocked class once per event, not once per round (the diagnosis
+        # walks every worker; see _diagnose_block).
+        self._refusal_epoch = 0
+        self._diag_cache: dict[tuple, tuple] = {}
         self._dirty = True                     # wake-up flag: anything changed
         #                                        since the last zero-progress pass?
         self._validated: set[tuple] = set()    # class keys proven satisfiable
@@ -117,6 +124,12 @@ class Scheduler:
         # a disabled run pays one is-not-None check per readiness/refusal
         self.recorder = None
         self.capacity_blocked: dict[int, float] = {}  # id(dev) -> wanted MB
+        # sharded control plane (shardplane.py): this scheduler's identity
+        # inside a ShardedScheduler, and the lease broker gating bandwidth
+        # grants on shared devices. The unsharded defaults cost one is-None
+        # check per I/O grant and nothing else.
+        self.shard_id = 0
+        self.shard_lease = None
         # tuning extensions (interference.py / autotune.DriftConfig): both
         # default off, leaving the paper's placement byte-identical
         self.drift_config: Optional[DriftConfig] = None
@@ -169,6 +182,21 @@ class Scheduler:
                         self._tier_max_cap.get(key, 0.0), d.capacity_mb)
 
     # ------------------------------------------------------------------ utils
+    @property
+    def _dirty(self) -> bool:
+        return self._dirty_flag
+
+    @_dirty.setter
+    def _dirty(self, value: bool) -> None:
+        """Every wake-up (True write) advances the refusal epoch — the
+        cache key for memoized blocked-head diagnoses. Writes come from
+        this class and from the runtime/backends (``scheduler._dirty =
+        True`` on health transitions and burst boundaries), so the setter
+        is the one chokepoint that sees them all."""
+        if value:
+            self._refusal_epoch += 1
+        self._dirty_flag = value
+
     @staticmethod
     def _tuner_key(sig: str, tier: Optional[str]) -> str:
         return sig if tier is None else f"{sig}@{tier}"
@@ -372,30 +400,53 @@ class Scheduler:
         launched = 0
         while heads:
             _, key = heapq.heappop(heads)
-            q = self._ready_q[key]
-            task = q[0]
-            if self._try_place(task):
-                q.popleft()
-                self._ready_count -= 1
-                sig = self._sig_key(task)
-                self._sig_ready[sig] -= 1
-                if not self._sig_ready[sig]:
-                    del self._sig_ready[sig]
+            if self._attempt_head(key):
                 launched += 1
+                q = self._ready_q.get(key)
                 if q:
                     heapq.heappush(heads, (q[0]._ready_seq, key))
-                else:
-                    # drop drained classes so rounds stay O(live classes)
-                    # (per-call storage_bw overrides can mint many keys)
-                    del self._ready_q[key]
-            elif self.recorder is not None:
-                # class blocked until the next round — diagnose why (pure
-                # reads) so ready->launch time is attributable per class
-                reason, dev_name, wanted = self._diagnose_block(task)
-                self.recorder.note_block(key, reason, dev_name, wanted)
-            # else: class blocked until the next round — nothing that happens
-            # later in this round can make it placeable (resources only shrink)
         return launched
+
+    def _attempt_head(self, key: tuple) -> bool:
+        """One placement attempt on the head of class ``key`` (no re-queue):
+        True launched and dequeued it; False leaves the class blocked for
+        the rest of the round. The sharded control plane
+        (shardplane.ShardedScheduler) calls this directly so its global
+        round can interleave class heads across shards in readiness order."""
+        q = self._ready_q[key]
+        task = q[0]
+        if self._try_place(task):
+            q.popleft()
+            self._ready_count -= 1
+            sig = self._sig_key(task)
+            self._sig_ready[sig] -= 1
+            if not self._sig_ready[sig]:
+                del self._sig_ready[sig]
+            if not q:
+                # drop drained classes so rounds stay O(live classes)
+                # (per-call storage_bw overrides can mint many keys)
+                del self._ready_q[key]
+            return True
+        if self.recorder is not None:
+            # class blocked until the next round — diagnose why (pure
+            # reads) so ready->launch time is attributable per class.
+            # Memoized per (class, head, refusal epoch): re-diagnosing
+            # the same head within one dirty wake-up would re-walk every
+            # worker per round for an answer that only event-level state
+            # changes can alter (within a pass resources only shrink).
+            cached = self._diag_cache.get(key)
+            if cached is not None and cached[0] == self._refusal_epoch \
+                    and cached[1] == task.tid:
+                reason, dev_name, wanted = cached[2]
+            else:
+                result = self._diagnose_block(task)
+                self._diag_cache[key] = (
+                    self._refusal_epoch, task.tid, result)
+                reason, dev_name, wanted = result
+            self.recorder.note_block(key, reason, dev_name, wanted)
+        # else: class blocked until the next round — nothing that happens
+        # later in this round can make it placeable (resources only shrink)
+        return False
 
     def _diagnose_block(self, task: TaskInstance) -> tuple:
         """Classify why ``task`` (a blocked class head) could not be placed
@@ -538,6 +589,9 @@ class Scheduler:
             return False
         if not self._capacity_ok(task, dev):
             return False
+        if bw > 0 and self.shard_lease is not None \
+                and not self.shard_lease.acquire(self.shard_id, dev, bw):
+            return False
         w.free_io_executors -= 1
         if bw >= 0:
             dev.allocate(bw)
@@ -562,7 +616,15 @@ class Scheduler:
             return False
         if not self._capacity_ok(task, dev):
             return False
+        # lease before admit: un-admitting is observable tuner state, so the
+        # lease (pure accounting, and always grantable after can_allocate —
+        # see shardplane.LeaseBroker) is the one taken tentatively
+        if c > 0 and self.shard_lease is not None \
+                and not self.shard_lease.acquire(self.shard_id, dev, c):
+            return False
         if not tuner.admit():
+            if c > 0 and self.shard_lease is not None:
+                self.shard_lease.release(self.shard_id, dev, c)
             return False  # current epoch full; wait for the next one
         node.free_io_executors -= 1
         dev.allocate(c)
@@ -587,6 +649,9 @@ class Scheduler:
             if w.free_io_executors <= 0 or not dev.can_allocate(c):
                 continue
             if not self._capacity_ok(task, dev):
+                continue
+            if c > 0 and self.shard_lease is not None \
+                    and not self.shard_lease.acquire(self.shard_id, dev, c):
                 continue
             w.free_io_executors -= 1
             dev.allocate(c)
@@ -729,6 +794,8 @@ class Scheduler:
             w.free_io_executors += 1
             dev = task.device or w.storage
             dev.release(task.granted_bw)
+            if self.shard_lease is not None and task.granted_bw > 0:
+                self.shard_lease.release(self.shard_id, dev, task.granted_bw)
             if task.reserved_mb:
                 # commit-at-finish: the written bytes become resident data;
                 # a failed writer's reservation is returned instead
@@ -780,6 +847,8 @@ class Scheduler:
             w.free_io_executors += 1
             dev = task.device or w.storage
             dev.release(task.granted_bw)
+            if self.shard_lease is not None and task.granted_bw > 0:
+                self.shard_lease.release(self.shard_id, dev, task.granted_bw)
             if task.reserved_mb:
                 dev.cancel_reservation(task.reserved_mb)
         if task.epoch is not None:

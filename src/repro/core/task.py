@@ -125,6 +125,20 @@ class SimSpec:
 class TaskInstance:
     _ids = itertools.count()
 
+    # __slots__: at the 1M-task bench scale (benchmarks/sched_scale.py)
+    # the per-instance attribute dict dominates live memory — the launch
+    # log keeps every instance alive to the end of the run, and the cache
+    # pressure of those dicts is what bends the per-task cost superlinear.
+    # _plan_seq is capture-mode-only and deliberately left unset elsewhere
+    # (the lint rules read it via getattr-with-default).
+    __slots__ = (
+        "tid", "defn", "args", "kwargs", "sim", "storage_bw", "tier",
+        "state", "deps", "anti_deps", "children", "futures", "worker",
+        "device", "granted_bw", "tuner_key", "reserved_mb", "read_penalty",
+        "_datalife", "submit_time", "start_time", "end_time",
+        "measured_duration", "_telemetry_k", "epoch", "retries", "error",
+        "_ready_seq", "_sim_seq", "shard", "shard_key", "_plan_seq")
+
     def __init__(self, defn: TaskDef, args: tuple, kwargs: dict,
                  sim: SimSpec | None = None,
                  storage_bw: Optional[ConstraintSpec] = None,
@@ -181,6 +195,10 @@ class TaskInstance:
         self.error: Optional[BaseException] = None
         self._ready_seq = -1                 # global readiness order (scheduler)
         self._sim_seq = -1                   # launch order (sim event queue)
+        # sharded control plane (core.shardplane): owning shard and the
+        # optional explicit routing anchor (``shard_key=`` call-time kwarg)
+        self.shard = 0
+        self.shard_key = None
 
     @property
     def duration(self) -> float:

@@ -251,5 +251,6 @@ def apply_tier_config(cluster, tier_config: dict) -> int:
             dev.congestion_alpha = float(cfg["congestion_alpha"])
         dev.congestion_knee = max(1, int(dev.bandwidth / dev.per_stream_cap))
         dev.available_bw = dev.bandwidth
+        dev.invalidate_rates()  # memoized T(k) curve is stale (storage_model)
         n += 1
     return n

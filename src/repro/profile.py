@@ -1,0 +1,115 @@
+"""``python -m repro.profile`` — cProfile/pstats wrapper over any script.
+
+Profiles an unmodified script (task bodies and all) under cProfile and
+prints the top-N hot spots by cumulative time, the same table the
+scheduler-scale work uses to pick optimization targets::
+
+    PYTHONPATH=src python -m repro.profile benchmarks/sched_scale.py \
+        --top 25 --json PROFILE.json -- --n 100000
+
+Everything after ``--`` is passed to the script as its own ``sys.argv``.
+``--sort`` accepts any pstats key (``cumulative``, ``tottime``,
+``ncalls``, ...); ``--json`` additionally writes the table as structured
+rows so successive runs can be diffed mechanically (the pre/post evidence
+tables in PR descriptions come from this).
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import json
+import pstats
+import runpy
+import sys
+
+
+def profile_script(path: str, argv: list[str] | None = None,
+                   run_name: str = "__main__") -> pstats.Stats:
+    """Execute ``path`` under cProfile with ``sys.argv`` set to
+    ``[path] + argv`` and return the collected :class:`pstats.Stats`.
+    The script's ``SystemExit`` (argparse, sys.exit) is swallowed so the
+    profile of a partial run still comes back."""
+    old_argv = sys.argv
+    sys.argv = [path] + list(argv or [])
+    prof = cProfile.Profile()
+    try:
+        prof.enable()
+        try:
+            runpy.run_path(path, run_name=run_name)
+        except SystemExit:
+            pass
+        finally:
+            prof.disable()
+    finally:
+        sys.argv = old_argv
+    return pstats.Stats(prof)
+
+
+def stats_rows(stats: pstats.Stats, sort: str = "cumulative",
+               top: int = 25) -> list[dict]:
+    """The top-``top`` entries of ``stats`` as structured rows:
+    ``{func, file, line, ncalls, primcalls, tottime, cumtime}``."""
+    stats.sort_stats(sort)
+    rows = []
+    for func in stats.fcn_list[:top]:  # sorted order
+        cc, nc, tt, ct, _callers = stats.stats[func]
+        filename, line, name = func
+        rows.append({
+            "func": name,
+            "file": filename,
+            "line": line,
+            "ncalls": nc,
+            "primcalls": cc,
+            "tottime": round(tt, 6),
+            "cumtime": round(ct, 6),
+        })
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    """Human-readable hot-spot table (fixed-width, pstats-like)."""
+    lines = [f"{'ncalls':>12} {'tottime':>9} {'cumtime':>9}  function"]
+    for r in rows:
+        calls = str(r["ncalls"])
+        if r["primcalls"] != r["ncalls"]:
+            calls = f"{r['ncalls']}/{r['primcalls']}"
+        where = f"{r['file']}:{r['line']}" if r["line"] else r["file"]
+        lines.append(f"{calls:>12} {r['tottime']:>9.3f} {r['cumtime']:>9.3f}"
+                     f"  {r['func']}  ({where})")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> list[dict]:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.profile",
+        description="Profile a script under cProfile and print the top-N "
+                    "hot spots (args after -- go to the script).")
+    ap.add_argument("script", help="path of the script to profile")
+    ap.add_argument("--top", type=int, default=25,
+                    help="number of entries to show (default 25)")
+    ap.add_argument("--sort", default="cumulative",
+                    help="pstats sort key (default: cumulative)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write the table as JSON rows to this path")
+    args, script_args = ap.parse_known_args(argv)
+    if script_args and script_args[0] == "--":
+        script_args = script_args[1:]
+
+    stats = profile_script(args.script, script_args)
+    rows = stats_rows(stats, sort=args.sort, top=args.top)
+    total = sum(tt for _, (_, _, tt, _, _) in stats.stats.items())
+    print(f"profiled {args.script}: {total:.2f}s total in "
+          f"{len(stats.stats)} functions; top {len(rows)} by {args.sort}:")
+    print(format_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"script": args.script, "argv": script_args,
+                       "sort": args.sort, "total_tottime": round(total, 6),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {args.json_out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -24,3 +24,28 @@ def test_golden_small_odd_sizes():
         assert seed_stats["makespan"] == new_stats["makespan"]
         assert seed_stats["total_io_mb"] == new_stats["total_io_mb"]
         assert seed_stats["overlap_time"] == new_stats["overlap_time"]
+
+
+def test_blocked_head_diagnosis_memoized_per_epoch(monkeypatch):
+    """The traced blocked-head diagnosis is memoized per (class head,
+    refusal epoch): within one epoch the expensive worker walk runs at
+    most once per head, and the count is deterministic run to run."""
+    from repro.core.scheduler import Scheduler
+
+    calls = []
+    orig = Scheduler._diagnose_block
+
+    def counting(self, task):
+        calls.append((task.tid, self._refusal_epoch))
+        return orig(self, task)
+
+    monkeypatch.setattr(Scheduler, "_diagnose_block", counting)
+    log_a, _, _ = run_workload(400, trace=True)
+    count_a = len(calls)
+    # the contended workload does block classes -> memoization is exercised
+    assert count_a > 0
+    # memoized: never two diagnoses of the same head in the same epoch
+    assert count_a == len(set(calls))
+    calls.clear()
+    log_b, _, _ = run_workload(400, trace=True)
+    assert len(calls) == count_a and log_b == log_a

@@ -1,0 +1,353 @@
+"""Sharded scheduler control plane (core.shardplane): routing algebra,
+bus ordering, lease-broker quota accounting, and the headline properties —
+shard-count invariance of the merged launch log and per-device occupancy
+timelines on the symmetric lockstep workload, facade-at-one-shard bit
+parity with the plain scheduler, and leases never over-committing at any
+instant of a contended shared-tier run.
+"""
+import itertools
+
+import pytest
+
+from benchmarks.sched_scale import run_symmetric, run_workload
+from repro.core import Cluster, IORuntime, constraint, io, task
+from repro.core.resources import StorageDevice
+from repro.core.scheduler import Scheduler
+from repro.core.shardplane import (MESSAGE_KINDS, MSG_DEP_DONE,
+                                   MSG_RESIDENCY_ADD, LeaseBroker, ShardBus,
+                                   ShardedScheduler, anchor_worker,
+                                   partition_cluster, shard_of_worker,
+                                   shard_workers, shared_devices)
+from repro.core.task import TaskInstance
+
+
+def _reset_ids():
+    TaskInstance._ids = itertools.count()
+
+
+# --------------------------------------------------------------------------
+# routing algebra
+# --------------------------------------------------------------------------
+def test_shard_of_worker_partitions_contiguously():
+    for n_workers in (1, 3, 4, 7, 12):
+        for n_shards in range(1, n_workers + 1):
+            owners = [shard_of_worker(w, n_workers, n_shards)
+                      for w in range(n_workers)]
+            # contiguous, non-decreasing, covers every shard
+            assert owners == sorted(owners)
+            assert set(owners) == set(range(n_shards))
+            # fair: block sizes differ by at most one
+            sizes = [owners.count(s) for s in range(n_shards)]
+            assert max(sizes) - min(sizes) <= 1
+            # shard_workers is the exact inverse
+            for s in range(n_shards):
+                for w in shard_workers(s, n_workers, n_shards):
+                    assert shard_of_worker(w, n_workers, n_shards) == s
+
+
+def test_anchor_worker_is_shard_count_independent():
+    n_workers = 8
+    for key in range(32):
+        w = anchor_worker(key, n_workers)
+        assert 0 <= w < n_workers
+        # two tasks sharing a key land on the same worker, hence the same
+        # shard under EVERY shard count — the co-location guarantee
+        for n_shards in (1, 2, 4, 8):
+            assert (shard_of_worker(w, n_workers, n_shards)
+                    == shard_of_worker(anchor_worker(key, n_workers),
+                                       n_workers, n_shards))
+
+
+def test_partition_cluster_views_share_worker_objects():
+    cluster = Cluster.make(n_workers=4, cpus=8, io_executors=32)
+    subs = partition_cluster(cluster, 2)
+    assert [len(s.workers) for s in subs] == [2, 2]
+    flat = [w for s in subs for w in s.workers]
+    assert all(a is b for a, b in zip(flat, cluster.workers))
+    assert all(s.shared_workdir == cluster.shared_workdir for s in subs)
+    with pytest.raises(ValueError):
+        partition_cluster(cluster, 0)
+    with pytest.raises(ValueError):
+        partition_cluster(cluster, 5)
+
+
+def test_shared_devices_are_the_cross_shard_tiers():
+    tiered = Cluster.make_tiered(n_workers=4)
+    shared = shared_devices(tiered, 2)
+    assert sorted(d.name for d in shared) == ["burst-buffer", "shared-fs"]
+    # per-worker devices never qualify, at any shard count
+    flat = Cluster.make(n_workers=4, cpus=8, io_executors=32)
+    assert shared_devices(flat, 2) == []
+    assert shared_devices(flat, 4) == []
+
+
+# --------------------------------------------------------------------------
+# bus: ordered delivery, counters, reentrancy
+# --------------------------------------------------------------------------
+def test_bus_delivers_in_sequence_order_with_counters():
+    got = []
+    bus = ShardBus(2, deliver=lambda m: got.append(m))
+    s0 = bus.post(MSG_DEP_DONE, 0, 0, "a")          # local
+    s1 = bus.post(MSG_RESIDENCY_ADD, 0, None, "b")  # broadcast, counted only
+    s2 = bus.post(MSG_DEP_DONE, 0, 1, "c")          # cross
+    assert (s0, s1, s2) == (0, 1, 2)
+    assert bus.drain() == 3
+    # only readiness kinds reach the deliver callback, in seq order
+    assert [m[0] for m in got] == [0, 2]
+    assert [m[4] for m in got] == ["a", "c"]
+    s = bus.summary()
+    assert s["kinds"][MSG_DEP_DONE] == 2
+    assert s["kinds"][MSG_RESIDENCY_ADD] == 1
+    assert s["local"] == 1 and s["cross"] == 2
+    assert s["delivered"] == 3 and s["pending"] == 0
+    assert set(s["kinds"]) == set(MESSAGE_KINDS)
+
+
+def test_bus_drain_is_reentrancy_safe():
+    got = []
+    bus = ShardBus(2)
+
+    def deliver(msg):
+        got.append(msg[4])
+        if msg[4] == "first":
+            bus.post(MSG_DEP_DONE, 0, 1, "chained")
+
+    bus._deliver = deliver
+    bus.post(MSG_DEP_DONE, 0, 0, "first")
+    assert bus.drain() == 2   # the chained message drains in the same call
+    assert got == ["first", "chained"]
+
+
+# --------------------------------------------------------------------------
+# lease broker: quota accounts, rebalance, underflow
+# --------------------------------------------------------------------------
+def _dev(bw=100.0):
+    return StorageDevice(name="bb", bandwidth=bw, per_stream_cap=bw,
+                         congestion_alpha=0.0, tier="bb")
+
+
+def test_lease_split_is_budget_exact_and_rebalances_in_shard_order():
+    dev = _dev(100.0)
+    broker = LeaseBroker([dev], 3)
+    accounts = broker._accounts[id(dev)][1]
+    assert sum(a.granted for a in accounts) == dev.bandwidth  # bit-exact
+    assert broker.acquire(0, dev, 30.0)          # within own lease
+    assert broker.rebalances == 0
+    assert broker.acquire(0, dev, 50.0)          # needs a rebalance pull
+    assert broker.rebalances >= 1
+    assert broker.check_invariants() == []
+    # shard order: the pull came from shard 1 first
+    assert accounts[1].granted < accounts[2].granted
+    # device fully committed elsewhere -> a real denial, counted
+    assert broker.acquire(1, dev, 100.0) is False
+    assert broker.denials == 1
+    broker.release(0, dev, 80.0)
+    assert broker.acquire(1, dev, 80.0)
+    assert broker.check_invariants() == []
+
+
+def test_lease_untracked_and_underflow():
+    dev, other = _dev(), _dev()
+    broker = LeaseBroker([dev], 2)
+    assert broker.acquire(0, other, 1e9)     # untracked: trivially granted
+    assert broker.acquire(0, dev, 0.0)       # zero-bw: trivially granted
+    assert broker.grants == 0                # neither counts as a grant
+    with pytest.raises(RuntimeError, match="underflow"):
+        broker.release(0, dev, 5.0)
+
+
+def test_lease_check_invariants_reports_violations():
+    dev = _dev(100.0)
+    broker = LeaseBroker([dev], 2)
+    broker._accounts[id(dev)][1][0].used = 75.0     # over-commit by hand
+    out = broker.check_invariants()
+    assert any("over-committed" in v for v in out)
+
+
+# --------------------------------------------------------------------------
+# facade at one shard == plain scheduler, bit for bit
+# --------------------------------------------------------------------------
+def test_facade_single_shard_bit_identical_to_plain():
+    log_plain, stats_plain, _ = run_workload(600)
+    log_facade, stats_facade, _ = run_workload(
+        600, scheduler_cls=lambda c, launch: ShardedScheduler(c, launch, 1))
+    assert log_facade == log_plain
+    assert stats_facade["makespan"] == stats_plain["makespan"]
+
+
+# --------------------------------------------------------------------------
+# routing on a live runtime: anchors, inheritance, round-robin
+# --------------------------------------------------------------------------
+def test_route_anchor_inheritance_round_robin():
+    _reset_ids()
+    cluster = Cluster.make(n_workers=4, cpus=8, io_executors=32)
+
+    @task(returns=1)
+    def stage(x):
+        pass
+
+    with IORuntime(cluster, shards=2) as rt:
+        # round-robin over WORKERS 0..3 -> shards 0,0,1,1
+        frees = [stage(i, duration=0.1) for i in range(4)]
+        assert [f.task.shard for f in frees] == [0, 0, 1, 1]
+        # a consumer inherits its first Future input's producer shard
+        child = stage(frees[2], duration=0.1)
+        assert child.task.shard == frees[2].task.shard == 1
+        # an explicit shard_key beats inheritance; anchor = key % n_workers
+        pinned = stage(frees[0], duration=0.1, shard_key=3)
+        assert pinned.task.shard == shard_of_worker(3, 4, 2) == 1
+        rt.barrier(final=True)
+        # confinement: every launch happened on the owning shard's workers
+        names = [[w.name for w in s.cluster.workers]
+                 for s in rt.scheduler.shards]
+        for t in rt.scheduler.completed:
+            assert t.worker.name in names[t.shard]
+
+
+def test_runtime_rejects_more_shards_than_workers():
+    cluster = Cluster.make(n_workers=2, cpus=8, io_executors=32)
+    with pytest.raises(ValueError, match="n_shards"):
+        IORuntime(cluster, shards=3)
+
+
+# --------------------------------------------------------------------------
+# headline property: shard-count invariance on the symmetric workload
+# --------------------------------------------------------------------------
+def _symmetric_occupancy(shards):
+    """run_symmetric's workload, returning (launch_log, occupancy, stats)
+    where occupancy is the full per-device timeline: one (tid, start, end,
+    worker, device, granted_bw) tuple per completed task."""
+    _reset_ids()
+    cluster = Cluster.make(n_workers=4, cpus=8, io_executors=32)
+    cluster.shared_workdir = False
+
+    @constraint(computingUnits=8)
+    @task(returns=1)
+    def stage(x, i):
+        pass
+
+    @constraint(storageBW=8)
+    @io
+    @task()
+    def ck(x, i):
+        pass
+
+    with IORuntime(cluster, shards=shards) as rt:
+        futs = [0] * 8
+        for _ in range(3):
+            for i in range(8):
+                futs[i] = stage(futs[i], i, duration=1.0, shard_key=i)
+                ck(futs[i], i, io_mb=40.0, shard_key=i)
+        rt.barrier(final=True)
+        occ = sorted(
+            (t.tid, t.start_time, t.end_time, t.worker.name,
+             t.device.name if t.device is not None else None, t.granted_bw)
+            for t in rt.scheduler.completed)
+        return list(rt.scheduler.launch_log), occ, rt.stats()
+
+
+def test_shard_count_invariance_log_and_occupancy():
+    log1, occ1, stats1 = _symmetric_occupancy(1)
+    for n in (2, 4):
+        logn, occn, statsn = _symmetric_occupancy(n)
+        assert logn == log1, f"launch log diverged at shards={n}"
+        assert occn == occ1, f"occupancy timeline diverged at shards={n}"
+        assert statsn["makespan"] == stats1["makespan"]
+        assert statsn["shards"]["lease_violations"] == []
+
+
+def test_sharded_run_is_deterministic_across_repeats():
+    log_a, stats_a, _ = run_symmetric(8, 3, shards=4)
+    log_b, stats_b, _ = run_symmetric(8, 3, shards=4)
+    assert log_a == log_b
+    assert stats_a["makespan"] == stats_b["makespan"]
+
+
+# --------------------------------------------------------------------------
+# properties of a contended shared-tier run: leases, bus, edge counts
+# --------------------------------------------------------------------------
+def test_leases_never_overcommit_at_any_instant():
+    _reset_ids()
+    cluster = Cluster.make_tiered(n_workers=4)
+
+    @constraint(tier="bb", storageBW=300)
+    @io
+    @task()
+    def burst(i):
+        pass
+
+    with IORuntime(cluster, shards=2) as rt:
+        broker = rt.scheduler.broker
+        violations = []
+        orig_acquire, orig_release = broker.acquire, broker.release
+
+        def acquire(shard, dev, bw):
+            ok = orig_acquire(shard, dev, bw)
+            violations.extend(broker.check_invariants())
+            return ok
+
+        def release(shard, dev, bw):
+            orig_release(shard, dev, bw)
+            violations.extend(broker.check_invariants())
+
+        broker.acquire, broker.release = acquire, release
+        # 6 x 300 MB/s against a 1600 MB/s burst buffer, all anchored to
+        # shard 0 whose lease is only half the budget: forces rebalancing
+        # and device-level queueing in the same run
+        for i in range(6):
+            burst(i, io_mb=300.0, shard_key=0)
+        rt.barrier(final=True)
+        assert violations == []
+        assert broker.grants >= 6
+        assert broker.rebalances >= 1
+        # leases change accounting, never placement: nothing was denied
+        assert broker.denials == 0
+        stats = rt.stats()
+        assert stats["shards"]["lease_violations"] == []
+        # steady state: everything released back
+        per_shard = stats["shards"]["leases"]["devices"]["burst-buffer"]
+        assert all(a["used"] == 0 for a in per_shard["per_shard"])
+
+
+def test_cross_shard_edges_travel_as_bus_messages():
+    _reset_ids()
+    cluster = Cluster.make(n_workers=4, cpus=8, io_executors=32)
+
+    @task(returns=1)
+    def stage(x):
+        pass
+
+    with IORuntime(cluster, shards=2) as rt:
+        # a chain that ping-pongs between anchor workers 0 (shard 0) and
+        # 2 (shard 1): every edge is a cross-shard DEP_DONE
+        fut = stage(0, duration=0.1, shard_key=0)
+        for hop in range(1, 6):
+            fut = stage(fut, duration=0.1, shard_key=(hop % 2) * 2)
+        rt.barrier(final=True)
+        stats = rt.stats()
+    shards = stats["shards"]
+    assert shards["n_shards"] == 2
+    assert shards["cross_shard_edges"] == 5
+    assert shards["local_edges"] == 0
+    assert shards["bus"]["kinds"]["DEP_DONE"] >= 6
+    assert shards["bus"]["cross"] >= 5
+    assert shards["bus"]["pending"] == 0
+    assert sum(p["n_launched"] for p in shards["per_shard"]) == 6
+
+
+def test_residency_updates_broadcast_on_the_bus():
+    _reset_ids()
+    cluster = Cluster.make_tiered(n_workers=4, ssd_capacity_gb=1.0)
+
+    @constraint(tier="bb", storageBW=100)
+    @io
+    @task(returns=1)
+    def put(i):
+        pass
+
+    with IORuntime(cluster, shards=2) as rt:
+        put(0, io_mb=64.0, shard_key=0)
+        put(1, io_mb=64.0, shard_key=2)
+        rt.barrier(final=True)
+        kinds = rt.scheduler.bus.summary()["kinds"]
+    assert kinds["RESIDENCY_ADD"] >= 2
